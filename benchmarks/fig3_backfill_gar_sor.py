@@ -1,0 +1,32 @@
+"""Fig 3: GAR and SOR — Backfill vs Strict FIFO (§5.1.2).
+
+Paper: Backfill lifts SOR by ~3.6% median and GAR moderately, because
+small jobs run on resources the blocked head cannot use."""
+
+from repro.core import QueuePolicy
+
+from .common import (loaded_horizon, print_metrics, run_scenario,
+                     scaled_training_jobs)
+
+
+def main() -> dict:
+    jobs = scaled_training_jobs(600, seed=3, arrival_rate_per_hour=900.0,
+                                mean_duration_s=3600.0)
+    h = loaded_horizon(jobs)
+    strict = run_scenario(jobs, policy=QueuePolicy.STRICT_FIFO, horizon=h)
+    backfill = run_scenario(jobs, policy=QueuePolicy.BACKFILL, horizon=h)
+    rs = print_metrics("Strict FIFO", strict)
+    rb = print_metrics("Backfill", backfill)
+    dsor = rb["sor"] - rs["sor"]
+    dgar = rb["median_gar"] - rs["median_gar"]
+    print(f"Backfill deltas: SOR {dsor:+.3f}  median GAR {dgar:+.3f}")
+    assert rb["sor"] > rs["sor"], "Backfill must lift SOR (Fig 3)"
+    assert rb["median_gar"] >= rs["median_gar"] - 0.02, \
+        "GAR must stay high under Backfill"
+    return {"sor_strict": rs["sor"], "sor_backfill": rb["sor"],
+            "gar_strict": rs["median_gar"],
+            "gar_backfill": rb["median_gar"]}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig 8: JWTD with E-Binpack vs native (§5.1.3).
+
+Paper: average waiting time decreases across job sizes with E-Binpack —
+less fragmentation means gangs find whole nodes sooner."""
+
+import numpy as np
+
+from repro.core import Strategy
+
+from .common import (fragmenting_jobs, loaded_horizon, print_metrics,
+                     run_scenario, scaled_training_jobs)
+
+
+def main() -> dict:
+    jobs = fragmenting_jobs(350, seed=9) + [
+        j for j in scaled_training_jobs(150, seed=10) if j.n_gpus >= 32]
+    for i, j in enumerate(jobs):
+        j.uid = i
+    spread = run_scenario(jobs, train_strategy=Strategy.SPREAD)
+    ebp = run_scenario(jobs, train_strategy=Strategy.E_BINPACK)
+    rs = print_metrics("native (spread)", spread)
+    rb = print_metrics("E-Binpack", ebp)
+
+    def overall(res):
+        w = [j.waiting_time for j in res.jobs if j.waiting_time is not None]
+        return float(np.mean(w))
+
+    ws, wb = overall(spread), overall(ebp)
+    print(f"overall mean wait: native {ws:.0f}s -> E-Binpack {wb:.0f}s")
+    assert wb <= ws * 1.05, "E-Binpack must not worsen mean JWTD"
+    return {"wait_native": ws, "wait_ebinpack": wb,
+            "jwtd_native": rs["jwtd_mean"], "jwtd_ebinpack": rb["jwtd_mean"]}
+
+
+if __name__ == "__main__":
+    main()

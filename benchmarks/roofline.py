@@ -1,0 +1,61 @@
+"""§Roofline: render the (arch × shape × mesh) table from the dry-run
+JSONs in ``experiments/dryrun/`` (deliverable g).
+
+Run ``python -m repro.launch.dryrun --arch all --shape all`` (and with
+``--multi-pod``) first; this module only reads the recorded artifacts.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+OUT_DIR = "experiments/dryrun"
+
+
+def load_results(out_dir: str = OUT_DIR, rules: str = "baseline"
+                 ) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("rules", "baseline") == rules:
+            rows.append(r)
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    return (f"{r['arch']:26s} {r['shape']:11s} {r['mesh']:8s} "
+            f"{r['compute_term_s']:>10.3e} {r['memory_term_s']:>10.3e} "
+            f"{r['collective_term_s']:>10.3e}  {r['dominant_term']:>10s} "
+            f"{r['useful_flops_ratio']:>7.3f}")
+
+
+def main(rules: str = "baseline") -> List[Dict]:
+    rows = load_results(rules=rules)
+    if not rows:
+        print(f"no dry-run artifacts under {OUT_DIR} — run "
+              "`python -m repro.launch.dryrun` first")
+        return []
+    hdr = (f"{'arch':26s} {'shape':11s} {'mesh':8s} "
+           f"{'compute(s)':>10s} {'memory(s)':>10s} {'collect(s)':>10s}  "
+           f"{'dominant':>10s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(fmt_row(r))
+    n_single = sum(1 for r in rows if r["mesh"] == "16x16")
+    n_multi = sum(1 for r in rows if r["mesh"] == "2x16x16")
+    print(f"\n{n_single} single-pod + {n_multi} multi-pod combinations "
+          f"compiled (rules={rules})")
+    doms = {}
+    for r in rows:
+        doms[r["dominant_term"]] = doms.get(r["dominant_term"], 0) + 1
+    print("dominant-term histogram:", doms)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

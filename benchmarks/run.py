@@ -1,0 +1,55 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` runs everything except the
+(hour-scale) dry-run sweeps, which are launched separately via
+``python -m repro.launch.dryrun`` and only *read* here by the roofline
+table."""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("Fig 2   job distribution", "benchmarks.fig2_job_distribution"),
+    ("Fig 3   Backfill GAR/SOR", "benchmarks.fig3_backfill_gar_sor"),
+    ("Fig 4   JWTD by policy", "benchmarks.fig4_jwtd_policies"),
+    ("Fig 5   Backfill GFR", "benchmarks.fig5_backfill_gfr"),
+    ("Fig 6   E-Binpack GFR", "benchmarks.fig6_ebinpack_gfr"),
+    ("Fig 7   E-Binpack GAR/SOR", "benchmarks.fig7_ebinpack_gar_sor"),
+    ("Fig 8   E-Binpack JWTD", "benchmarks.fig8_ebinpack_jwtd"),
+    ("Fig 9   E-Binpack JTTED", "benchmarks.fig9_ebinpack_jtted"),
+    ("Fig10-12 tenant quotas", "benchmarks.fig10_quota"),
+    ("Fig13-14 inference GAR/GFR", "benchmarks.fig13_inference_gar"),
+    ("Fig 15  GFR vs scale", "benchmarks.fig15_gfr_scale"),
+    ("§3.4.3  snapshot bench", "benchmarks.snapshot_bench"),
+    ("kernel  node-score bench", "benchmarks.kernel_bench"),
+    ("§Roofline table", "benchmarks.roofline"),
+]
+
+
+def main() -> int:
+    import importlib
+    failures = []
+    for title, modname in MODULES:
+        print(f"\n================ {title} ({modname})")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(modname)
+            mod.main()
+            print(f"[ok] {title} ({time.time() - t0:.1f}s)")
+        except Exception as e:   # noqa: BLE001 — report all, fail at end
+            failures.append(title)
+            print(f"[FAIL] {title}: {e}")
+            traceback.print_exc()
+    print("\n================ summary")
+    if failures:
+        print(f"{len(failures)} benchmark(s) failed: {failures}")
+        return 1
+    print(f"all {len(MODULES)} benchmarks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on synthetic data, with checkpointing and resume.
+
+This is the deliverable-(b) end-to-end example: the full substrate path —
+config -> model init -> data pipeline -> jitted train_step (loss + AdamW)
+-> checkpoint save/restore — exactly the code the production launcher
+lowers under the 256-chip mesh (see ``repro.launch.dryrun``), here run on
+CPU at a ~100M scale.
+
+Usage::
+
+    PYTHONPATH=src python examples/train_e2e.py                 # 300 steps
+    PYTHONPATH=src python examples/train_e2e.py --steps 20      # quick look
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import load_checkpoint, save_checkpoint
+from repro.configs.base import ArchConfig
+from repro.data import DataConfig, synthetic_batches
+from repro.train import AdamWConfig, TrainState
+
+# ~99M parameters: 2*V*d embed/head (8.4M) + 22 blocks of
+# (4d^2 attn + 3*d*d_ff SwiGLU) ~ 90M.  vocab 8192 keeps the synthetic
+# bigram task learnable within a few hundred steps.
+ARCH_100M = ArchConfig(
+    name="repro-100m", family="dense", n_layers=22, d_model=512,
+    n_heads=8, n_kv_heads=4, d_ff=2048, vocab=8192, rope_theta=1e4,
+    citation="(ours) ~100M e2e example")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = ARCH_100M
+    n = cfg.n_params()
+    print(f"arch {cfg.name}: {n/1e6:.1f}M params, "
+          f"{cfg.n_layers}L d={cfg.d_model} ff={cfg.d_ff} v={cfg.vocab}")
+
+    state = TrainState(cfg, jax.random.PRNGKey(args.seed),
+                       AdamWConfig(lr=args.lr, weight_decay=0.01))
+    data = synthetic_batches(cfg, DataConfig(batch=args.batch,
+                                             seq=args.seq, seed=args.seed))
+    tokens_per_step = args.batch * args.seq
+    t0 = time.time()
+    for i in range(args.steps):
+        m = state.step(next(data))
+        if i % 10 == 0 or i == args.steps - 1:
+            dt = time.time() - t0
+            tps = tokens_per_step * (i + 1) / max(dt, 1e-9)
+            print(f"step {i:4d}  loss {m['loss']:.4f}  "
+                  f"gnorm {m['grad_norm']:.3f}  {tps:7.0f} tok/s "
+                  f"({dt:.0f}s)", flush=True)
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, {"params": state.params,
+                                        "opt": state.opt_state}, step=i + 1)
+            print(f"  checkpoint @ step {i+1} -> {args.ckpt}")
+
+    losses = [h["loss"] for h in state.history]
+    k = max(1, len(losses) // 5)
+    first = sum(losses[:k]) / k
+    last = sum(losses[-k:]) / k
+    print(f"\nmean loss first-{k} {first:.4f} -> last-{k} {last:.4f}")
+    if args.steps >= 50:          # too noisy to assert on a quick look
+        assert last < first, "training must reduce the loss"
+
+    if args.ckpt and args.steps >= args.ckpt_every:
+        restored = load_checkpoint(args.ckpt)
+        leaves = jax.tree_util.tree_leaves(restored["params"])
+        print(f"restore check: step={restored['step']}, "
+              f"{len(leaves)} param leaves, "
+              f"dtype {leaves[0].dtype}  [ok]")
+    print("train_e2e complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Registry mapping ``--arch <id>`` to configs, plus input construction.
+
+``input_specs`` builds the allocation-free ``ShapeDtypeStruct`` batch for
+the dry-run; ``make_inputs`` builds small concrete batches for smoke
+tests.  Both understand the per-family input contracts:
+
+* decoder-only LM families — ``tokens`` (B, S) [+ ``labels`` for train];
+* vlm — text ``tokens`` (B, S - n_prefix) plus stubbed ``patch_embeds``
+  (B, n_prefix, d_model) so the total sequence length is exactly S;
+* encdec — stubbed ``enc_embeds`` (B, S // enc_seq_divisor, d_model)
+  plus decoder ``tokens`` (B, S).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import ArchConfig, InputShape
+
+_MODULES: Dict[str, str] = {
+    "mistral-large-123b": "mistral_large_123b",
+    "glm4-9b": "glm4_9b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "hymba-1.5b": "hymba_1_5b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "granite-20b": "granite_20b",
+    "rwkv6-3b": "rwkv6_3b",
+    "llava-next-34b": "llava_next_34b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(arch_id: str, smoke: bool = False) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"token": _sds((B,), jnp.int32)}
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        batch["tokens"] = _sds((B, S - cfg.n_prefix), jnp.int32)
+        batch["patch_embeds"] = _sds((B, cfg.n_prefix, cfg.d_model), dtype)
+    elif cfg.family == "encdec":
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        batch["enc_embeds"] = _sds(
+            (B, max(1, S // cfg.enc_seq_divisor), cfg.d_model), dtype)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = _sds(batch["tokens"].shape, jnp.int32)
+    return batch
+
+
+def make_inputs(cfg: ArchConfig, *, batch: int, seq: int,
+                kind: str = "train", dtype=jnp.float32, seed: int = 0
+                ) -> Dict[str, jnp.ndarray]:
+    """Small concrete batches for smoke tests and examples."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    if kind == "decode":
+        return {"token": jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch,)), jnp.int32)}
+    out: Dict[str, jnp.ndarray] = {}
+    if cfg.family == "vlm":
+        s_text = max(1, seq - cfg.n_prefix)
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, s_text)), jnp.int32)
+        out["patch_embeds"] = (jax.random.normal(
+            key, (batch, cfg.n_prefix, cfg.d_model)) * 0.02).astype(dtype)
+    elif cfg.family == "encdec":
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, seq)), jnp.int32)
+        out["enc_embeds"] = (jax.random.normal(
+            key, (batch, max(1, seq // cfg.enc_seq_divisor), cfg.d_model))
+            * 0.02).astype(dtype)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=(batch, seq)), jnp.int32)
+    if kind == "train":
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, size=out["tokens"].shape), jnp.int32)
+    return out

@@ -1,0 +1,29 @@
+"""Kant's core: cluster model, QSCH, RSCH, metrics, simulator."""
+
+from .cluster import ClusterState
+from .job import (Job, JobKind, JobState, Placement, PodPlacement,
+                  PRIO_HIGH, PRIO_LOW, PRIO_NORMAL, size_bucket)
+from .metrics import MetricsRecorder
+from .qsch import QSCH, QSCHConfig, QueuePolicy
+from .quota import QuotaManager, QuotaMode
+from .rsch import RSCH, RSCHConfig, Strategy
+from .scoring import (BINPACK, E_BINPACK, E_SPREAD, SPREAD, ScoreWeights,
+                      node_scores_np)
+from .simulator import SimConfig, Simulator, SimResult
+from .snapshot import (FullSnapshotter, IncrementalSnapshotter, Snapshot,
+                       snapshots_equal)
+from .topology import ClusterTopology, small_topology, \
+    training_cluster_topology
+from .workload import inference_trace, trace_stats, training_trace
+
+__all__ = [
+    "ClusterState", "Job", "JobKind", "JobState", "Placement",
+    "PodPlacement", "PRIO_HIGH", "PRIO_LOW", "PRIO_NORMAL", "size_bucket",
+    "MetricsRecorder", "QSCH", "QSCHConfig", "QueuePolicy", "QuotaManager",
+    "QuotaMode", "RSCH", "RSCHConfig", "Strategy", "BINPACK", "E_BINPACK",
+    "E_SPREAD", "SPREAD", "ScoreWeights", "node_scores_np", "SimConfig",
+    "Simulator", "SimResult", "FullSnapshotter", "IncrementalSnapshotter",
+    "Snapshot", "snapshots_equal", "ClusterTopology", "small_topology",
+    "training_cluster_topology", "inference_trace", "trace_stats",
+    "training_trace",
+]

@@ -1,0 +1,210 @@
+"""Array-native cluster resource state (paper §3.1, §3.4).
+
+The scheduler's view of the cluster is a bundle of dense arrays —
+per-node free-GPU counts, per-device busy/health bitmaps, GPU-type ids —
+plus the static :class:`~repro.core.topology.ClusterTopology`.  Keeping the
+state dense serves two of the paper's §3.4 optimizations directly:
+
+* *GPU-Type-based Node Pools* (§3.4.1) are boolean masks over the node
+  axis, so restricting the search space to one pool is a vectorized
+  ``mask &``, not a data-structure walk;
+* *incremental snapshots* (§3.4.3) reduce to copying dirty rows of these
+  arrays (see :mod:`repro.core.snapshot`).
+
+Mutation goes through :meth:`ClusterState.allocate` / ``release`` only, so
+dirty-row tracking and the allocation ledger can never drift from the
+arrays (property-tested in ``tests/test_properties.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .job import Job, Placement, PodPlacement
+from .topology import ClusterTopology
+
+
+@dataclasses.dataclass
+class ClusterState:
+    topology: ClusterTopology
+    # (n_nodes,) int32 GPU model id per node -> node pools (§3.4.1).
+    gpu_type: np.ndarray
+    # (n_nodes, gpus_per_node) bool: device currently allocated.
+    gpu_busy: np.ndarray
+    # (n_nodes, gpus_per_node) bool: device healthy (§3.3.1 health aware).
+    gpu_healthy: np.ndarray
+    # (n_nodes,) bool: node schedulable at all.
+    node_healthy: np.ndarray
+    # (n_nodes,) bool: node belongs to the inference dedicated zone
+    # (E-Spread, §3.3.4).
+    inference_zone: np.ndarray
+    # Allocation ledger: job uid -> placement.
+    allocations: Dict[int, Placement] = dataclasses.field(default_factory=dict)
+    # Nodes whose rows changed since the dirty set was last drained
+    # (consumed by the incremental snapshot, §3.4.3).
+    dirty_nodes: Set[int] = dataclasses.field(default_factory=set)
+
+    # ------------------------------------------------------------------
+    # Constructors
+    # ------------------------------------------------------------------
+    @classmethod
+    def create(cls, topology: ClusterTopology,
+               gpu_type: Optional[np.ndarray] = None,
+               inference_zone_nodes: int = 0) -> "ClusterState":
+        n, g = topology.n_nodes, topology.gpus_per_node
+        if gpu_type is None:
+            gpu_type = np.zeros(n, dtype=np.int32)
+        gpu_type = np.asarray(gpu_type, dtype=np.int32)
+        if gpu_type.shape != (n,):
+            raise ValueError("gpu_type must have shape (n_nodes,)")
+        zone = np.zeros(n, dtype=bool)
+        if inference_zone_nodes:
+            zone[:inference_zone_nodes] = True
+        return cls(
+            topology=topology,
+            gpu_type=gpu_type,
+            gpu_busy=np.zeros((n, g), dtype=bool),
+            gpu_healthy=np.ones((n, g), dtype=bool),
+            node_healthy=np.ones(n, dtype=bool),
+            inference_zone=zone,
+        )
+
+    # ------------------------------------------------------------------
+    # Derived views (all vectorized)
+    # ------------------------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return self.topology.n_nodes
+
+    @property
+    def gpus_per_node(self) -> int:
+        return self.topology.gpus_per_node
+
+    def free_gpus(self) -> np.ndarray:
+        """(n_nodes,) count of healthy, unallocated devices per node."""
+        usable = self.gpu_healthy & ~self.gpu_busy
+        free = usable.sum(axis=1).astype(np.int32)
+        return np.where(self.node_healthy, free, 0).astype(np.int32)
+
+    def used_gpus(self) -> np.ndarray:
+        return (self.gpu_busy & self.gpu_healthy).sum(axis=1).astype(np.int32)
+
+    def total_allocatable(self, gpu_type: Optional[int] = None) -> int:
+        """Total healthy GPU capacity (optionally within one node pool)."""
+        mask = self.node_healthy
+        if gpu_type is not None:
+            mask = mask & (self.gpu_type == gpu_type)
+        return int((self.gpu_healthy & mask[:, None]).sum())
+
+    def total_allocated(self, gpu_type: Optional[int] = None) -> int:
+        mask = self.node_healthy
+        if gpu_type is not None:
+            mask = mask & (self.gpu_type == gpu_type)
+        return int((self.gpu_busy & mask[:, None]).sum())
+
+    def pool_mask(self, gpu_type: int) -> np.ndarray:
+        """Node-pool membership mask (§3.4.1 heterogeneous splitting)."""
+        return (self.gpu_type == gpu_type) & self.node_healthy
+
+    def pool_free(self, gpu_type: int) -> int:
+        """Free GPUs inside one GPU-Type-based Node Pool."""
+        return int(self.free_gpus()[self.pool_mask(gpu_type)].sum())
+
+    def group_free(self, gpu_type: int) -> np.ndarray:
+        """(n_leaf_groups,) free GPUs per NodeNetGroup within a pool."""
+        free = np.where(self.pool_mask(gpu_type), self.free_gpus(), 0)
+        return np.bincount(self.topology.leaf_id, weights=free,
+                           minlength=self.topology.n_leaf_groups
+                           ).astype(np.int32)
+
+    def group_used(self, gpu_type: int) -> np.ndarray:
+        used = np.where(self.pool_mask(gpu_type), self.used_gpus(), 0)
+        return np.bincount(self.topology.leaf_id, weights=used,
+                           minlength=self.topology.n_leaf_groups
+                           ).astype(np.int32)
+
+    def fragmented_nodes(self) -> np.ndarray:
+        """Bool mask of fragmented nodes per §4.3: neither fully idle nor
+        fully occupied (w.r.t. healthy devices)."""
+        healthy_cap = self.gpu_healthy.sum(axis=1)
+        used = (self.gpu_busy & self.gpu_healthy).sum(axis=1)
+        frag = (used > 0) & (used < healthy_cap)
+        return frag & self.node_healthy & (healthy_cap > 0)
+
+    # ------------------------------------------------------------------
+    # Mutation (the only entry points — keeps dirty tracking sound)
+    # ------------------------------------------------------------------
+    def _touch(self, nodes: Iterable[int]) -> None:
+        self.dirty_nodes.update(int(n) for n in nodes)
+
+    def allocate(self, job: Job, placement: Placement) -> None:
+        """Bind a job to concrete devices.  Raises on any conflict; the
+        caller (RSCH) must have validated the placement — gang semantics
+        mean we never partially apply (§3.3.2)."""
+        if job.uid in self.allocations:
+            raise ValueError(f"job {job.uid} already allocated")
+        if placement.n_gpus != job.n_gpus:
+            raise ValueError("placement does not cover the job request")
+        # Validate first (all-or-nothing), then apply.
+        for pod in placement.pods:
+            self._validate_pod(job, pod)
+        for pod in placement.pods:
+            self.gpu_busy[pod.node, list(pod.gpu_indices)] = True
+        self.allocations[job.uid] = placement
+        self._touch(placement.nodes)
+
+    def _validate_pod(self, job: Job, pod: PodPlacement) -> None:
+        n = pod.node
+        if not (0 <= n < self.n_nodes):
+            raise ValueError(f"node {n} out of range")
+        if not self.node_healthy[n]:
+            raise ValueError(f"node {n} is unhealthy")
+        if self.gpu_type[n] != job.gpu_type:
+            raise ValueError(
+                f"node {n} pool {int(self.gpu_type[n])} != job pool "
+                f"{job.gpu_type}")
+        if len(pod.gpu_indices) != job.gpus_per_pod:
+            raise ValueError("pod placement size mismatch")
+        idx = list(pod.gpu_indices)
+        if max(idx) >= self.gpus_per_node or min(idx) < 0:
+            raise ValueError("GPU index out of range")
+        if self.gpu_busy[n, idx].any():
+            raise ValueError(f"GPU already busy on node {n}")
+        if not self.gpu_healthy[n, idx].all():
+            raise ValueError(f"unhealthy GPU selected on node {n}")
+
+    def release(self, job_uid: int) -> Placement:
+        """Free a job's devices (completion or preemption)."""
+        placement = self.allocations.pop(job_uid)
+        for pod in placement.pods:
+            self.gpu_busy[pod.node, list(pod.gpu_indices)] = False
+        self._touch(placement.nodes)
+        return placement
+
+    def set_gpu_health(self, node: int, gpu: int, healthy: bool) -> None:
+        self.gpu_healthy[node, gpu] = healthy
+        self._touch([node])
+
+    def set_node_health(self, node: int, healthy: bool) -> None:
+        self.node_healthy[node] = healthy
+        self._touch([node])
+
+    # ------------------------------------------------------------------
+    # Invariant check (used by property tests)
+    # ------------------------------------------------------------------
+    def check_invariants(self) -> None:
+        busy_from_ledger = np.zeros_like(self.gpu_busy)
+        for placement in self.allocations.values():
+            for pod in placement.pods:
+                idx = list(pod.gpu_indices)
+                if busy_from_ledger[pod.node, idx].any():
+                    raise AssertionError("double allocation in ledger")
+                busy_from_ledger[pod.node, idx] = True
+        if not np.array_equal(busy_from_ledger, self.gpu_busy):
+            raise AssertionError("gpu_busy drifted from allocation ledger")
+        free = self.free_gpus()
+        if (free < 0).any() or (free > self.gpus_per_node).any():
+            raise AssertionError("free GPU count out of range")

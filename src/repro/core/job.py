@@ -1,0 +1,145 @@
+"""Job and placement model (paper §2, §3.2).
+
+Kant schedules three kinds of AI jobs (§2 "Diverse Task Types"):
+
+* LLM distributed training  — gang-scheduled, throughput-oriented;
+* inference services        — pod-level scheduling, latency/HA-oriented;
+* development / debugging   — small, flexibility-oriented.
+
+A job consists of ``n_pods`` pods, each requesting ``gpus_per_pod`` GPUs of
+one GPU type.  Gang jobs (§3.3.2) are admitted, scheduled and preempted at
+job granularity (all-or-nothing); non-gang jobs at pod granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+class JobKind(enum.Enum):
+    TRAIN = "train"
+    INFER = "infer"
+    DEBUG = "debug"
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"        # submitted, waiting in the tenant queue
+    ADMITTED = "admitted"      # passed static + dynamic admission
+    RUNNING = "running"        # bound to devices
+    COMPLETED = "completed"
+    PREEMPTED = "preempted"    # evicted; will be requeued
+    FAILED = "failed"
+
+
+# Priority values: larger is more important.  These match the paper's
+# qualitative tiers (inference/HA > training > debug/backfill fodder).
+PRIO_HIGH = 100
+PRIO_NORMAL = 50
+PRIO_LOW = 10
+
+
+@dataclasses.dataclass
+class PodPlacement:
+    """Concrete device assignment for one pod (fine-grained, §3.3.1)."""
+
+    node: int
+    gpu_indices: Tuple[int, ...]      # device slots on that node
+    nic: int = 0                      # paired RDMA NIC (§3.3.1)
+
+    def __post_init__(self) -> None:
+        if len(set(self.gpu_indices)) != len(self.gpu_indices):
+            raise ValueError("duplicate GPU indices in a pod placement")
+
+
+@dataclasses.dataclass
+class Placement:
+    """Full placement of a job: one ``PodPlacement`` per pod."""
+
+    pods: List[PodPlacement]
+
+    @property
+    def nodes(self) -> List[int]:
+        return [p.node for p in self.pods]
+
+    @property
+    def n_gpus(self) -> int:
+        return sum(len(p.gpu_indices) for p in self.pods)
+
+    def distinct_nodes(self) -> List[int]:
+        return sorted(set(self.nodes))
+
+
+@dataclasses.dataclass
+class Job:
+    uid: int
+    tenant: str
+    gpu_type: int
+    n_pods: int
+    gpus_per_pod: int
+    kind: JobKind = JobKind.TRAIN
+    gang: bool = True
+    priority: int = PRIO_NORMAL
+    submit_time: float = 0.0
+    duration: float = 3600.0
+    preemptible: bool = True
+
+    # Mutable scheduling bookkeeping -----------------------------------
+    state: JobState = JobState.PENDING
+    admit_time: Optional[float] = None
+    start_time: Optional[float] = None      # scheduling completion (binding)
+    run_time: Optional[float] = None        # container actually running
+    end_time: Optional[float] = None
+    placement: Optional[Placement] = None
+    backfilled: bool = False                # scheduled by bypassing the head
+    preempt_count: int = 0
+    requeue_count: int = 0
+    borrowed_quota: int = 0                 # GPUs borrowed via shared quota
+
+    def __post_init__(self) -> None:
+        if self.n_pods <= 0 or self.gpus_per_pod <= 0:
+            raise ValueError("jobs must request at least one pod and GPU")
+        if not self.gang and self.kind == JobKind.TRAIN and self.n_pods > 1:
+            # The paper gang-schedules all distributed training (§3.2.1).
+            raise ValueError("multi-pod training jobs must be gang jobs")
+
+    @property
+    def n_gpus(self) -> int:
+        return self.n_pods * self.gpus_per_pod
+
+    @property
+    def waiting_time(self) -> Optional[float]:
+        if self.start_time is None:
+            return None
+        return self.start_time - self.submit_time
+
+    def order_key(self) -> Tuple[int, float, int, int]:
+        """Global queue ordering (§3.2.2): priority desc, submit time asc,
+        then size asc as the tie-breaker, uid for determinism."""
+        return (-self.priority, self.submit_time, self.n_gpus, self.uid)
+
+
+def size_bucket(n_gpus: int) -> str:
+    """JWTD size buckets (§4.4 uses 'fewer than 8' / 'more than 64' bands;
+    we refine to the sizes of Fig 4/8)."""
+    for bound, name in ((8, "<=8"), (64, "9-64"), (256, "65-256"),
+                        (1024, "257-1024"), (2048, "1025-2048")):
+        if n_gpus <= bound:
+            return name
+    return ">2048"
+
+
+SIZE_BUCKETS: Sequence[str] = ("<=8", "9-64", "65-256", "257-1024",
+                               "1025-2048", ">2048")
+
+
+def summarize_waits(jobs: Sequence[Job]) -> Dict[str, float]:
+    """Mean waiting time per size bucket over started jobs."""
+    acc: Dict[str, List[float]] = {}
+    for j in jobs:
+        w = j.waiting_time
+        if w is None:
+            continue
+        acc.setdefault(size_bucket(j.n_gpus), []).append(w)
+    return {k: sum(v) / len(v) for k, v in acc.items() if v}

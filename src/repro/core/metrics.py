@@ -1,0 +1,166 @@
+"""The paper's five scheduling metrics (§4): GAR, SOR, GFR, JWTD, JTTED.
+
+* **GAR** (§4.1) — instantaneous allocated/total GPUs.
+* **SOR** (§4.2) — time-integrated GPU-hours allocated / GPU-hours
+  available; accumulation starts at *scheduling completion* (binding),
+  before the container reaches Running, exactly as the paper specifies.
+* **GFR** (§4.3) — fraction of nodes neither fully idle nor fully
+  occupied.
+* **JWTD** (§4.4) — mean waiting time by job-size bucket (queueing +
+  scheduling-decision time).
+* **JTTED** (§4.5) — per-size NodeNum and NodeNetGroupNum deviation
+  ratios vs. the communication-optimal placement.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cluster import ClusterState
+from .job import Job, JobKind, SIZE_BUCKETS, size_bucket
+from .topology import ClusterTopology
+
+
+@dataclasses.dataclass
+class Sample:
+    t: float
+    gar: float
+    gfr: float
+    allocated: int
+    capacity: int
+    queue_depth: int
+
+
+@dataclasses.dataclass
+class JTTEDEntry:
+    uid: int
+    n_gpus: int
+    node_dev: float       # actual nodes / optimal nodes
+    group_dev: float      # actual groups / optimal groups
+
+
+class MetricsRecorder:
+    def __init__(self, topology: ClusterTopology) -> None:
+        self.topology = topology
+        self.samples: List[Sample] = []
+        self.jtted: List[JTTEDEntry] = []
+        self._finished: List[Job] = []
+        # Riemann accumulation for SOR.
+        self._last_t: Optional[float] = None
+        self._last_alloc: int = 0
+        self._last_cap: int = 0
+        self._gpu_seconds_alloc: float = 0.0
+        self._gpu_seconds_cap: float = 0.0
+
+    # ------------------------------------------------------------------
+    def sample(self, t: float, state: ClusterState, queue_depth: int = 0
+               ) -> Sample:
+        cap = state.total_allocatable()
+        alloc = state.total_allocated()
+        healthy_nodes = int(state.node_healthy.sum())
+        frag = int(state.fragmented_nodes().sum())
+        gfr = frag / healthy_nodes if healthy_nodes else 0.0
+        gar = alloc / cap if cap else 0.0
+        if self._last_t is not None:
+            dt = t - self._last_t
+            if dt > 0:
+                # GPU-hours accrue from scheduling completion (§4.2) — the
+                # allocation arrays flip at bind time, so integrating them
+                # matches the paper's semantics.
+                self._gpu_seconds_alloc += self._last_alloc * dt
+                self._gpu_seconds_cap += self._last_cap * dt
+        self._last_t, self._last_alloc, self._last_cap = t, alloc, cap
+        s = Sample(t=t, gar=gar, gfr=gfr, allocated=alloc, capacity=cap,
+                   queue_depth=queue_depth)
+        self.samples.append(s)
+        return s
+
+    def on_job_placed(self, job: Job) -> None:
+        """Record JTTED deviation ratios at placement time (§4.5)."""
+        if job.placement is None or job.kind is not JobKind.TRAIN:
+            return
+        topo = self.topology
+        actual_nodes = len(job.placement.distinct_nodes())
+        actual_groups = len({int(topo.leaf_id[n])
+                             for n in job.placement.distinct_nodes()})
+        opt_nodes = topo.optimal_node_num(job.n_gpus)
+        opt_groups = topo.optimal_group_num(job.n_gpus)
+        self.jtted.append(JTTEDEntry(
+            uid=job.uid, n_gpus=job.n_gpus,
+            node_dev=actual_nodes / max(1, opt_nodes),
+            group_dev=actual_groups / max(1, opt_groups)))
+
+    def on_job_finished(self, job: Job) -> None:
+        self._finished.append(job)
+
+    # ------------------------------------------------------------------
+    # Aggregates
+    # ------------------------------------------------------------------
+    def gar_series(self) -> Tuple[np.ndarray, np.ndarray]:
+        t = np.asarray([s.t for s in self.samples])
+        v = np.asarray([s.gar for s in self.samples])
+        return t, v
+
+    def gfr_series(self) -> Tuple[np.ndarray, np.ndarray]:
+        t = np.asarray([s.t for s in self.samples])
+        v = np.asarray([s.gfr for s in self.samples])
+        return t, v
+
+    def median_gar(self) -> float:
+        vals = [s.gar for s in self.samples]
+        return float(np.median(vals)) if vals else 0.0
+
+    def mean_gfr(self) -> float:
+        vals = [s.gfr for s in self.samples]
+        return float(np.mean(vals)) if vals else 0.0
+
+    def sor(self) -> float:
+        """Cumulative SOR over the observation window (§4.2)."""
+        if self._gpu_seconds_cap <= 0:
+            return 0.0
+        return self._gpu_seconds_alloc / self._gpu_seconds_cap
+
+    def jwtd(self, jobs: Optional[Sequence[Job]] = None
+             ) -> Dict[str, float]:
+        """Mean waiting time per size bucket (§4.4)."""
+        pool = list(jobs) if jobs is not None else self._finished
+        acc: Dict[str, List[float]] = {}
+        for j in pool:
+            w = j.waiting_time
+            if w is None:
+                continue
+            acc.setdefault(size_bucket(j.n_gpus), []).append(w)
+        return {b: float(np.mean(acc[b])) for b in SIZE_BUCKETS if b in acc}
+
+    def jwtd_max(self, jobs: Optional[Sequence[Job]] = None
+                 ) -> Dict[str, float]:
+        pool = list(jobs) if jobs is not None else self._finished
+        acc: Dict[str, List[float]] = {}
+        for j in pool:
+            w = j.waiting_time
+            if w is None:
+                continue
+            acc.setdefault(size_bucket(j.n_gpus), []).append(w)
+        return {b: float(np.max(acc[b])) for b in SIZE_BUCKETS if b in acc}
+
+    def jtted_by_bucket(self) -> Dict[str, Tuple[float, float]]:
+        """Mean (node_dev, group_dev) per size bucket (§4.5)."""
+        acc: Dict[str, List[JTTEDEntry]] = {}
+        for e in self.jtted:
+            acc.setdefault(size_bucket(e.n_gpus), []).append(e)
+        return {b: (float(np.mean([e.node_dev for e in v])),
+                    float(np.mean([e.group_dev for e in v])))
+                for b, v in acc.items()}
+
+    def report(self) -> Dict[str, object]:
+        return {
+            "median_gar": self.median_gar(),
+            "sor": self.sor(),
+            "mean_gfr": self.mean_gfr(),
+            "jwtd_mean": self.jwtd(),
+            "jwtd_max": self.jwtd_max(),
+            "jtted": self.jtted_by_bucket(),
+        }

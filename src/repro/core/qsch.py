@@ -1,0 +1,310 @@
+"""QSCH — the Queue-based Scheduler (paper §3.2).
+
+QSCH owns everything that happens to a job *before* RSCH places it:
+
+* per-tenant queues with the paper's ordering (priority desc, submit time,
+  job size as tiebreaker) (§3.2.2);
+* two-tier admission: static quota admission then dynamic resource
+  admission (§3.2.1), at job level for gang jobs, pod level otherwise;
+* queueing policies (Table 1): Strict FIFO, Best-Effort FIFO, Backfill
+  (with head-timeout preemption of backfilled jobs);
+* preemption control (§3.2.3): priority preemption, quota-reclamation
+  preemption, backfill preemption — all deliberately conservative: a
+  preemption fires only when the dry-run accounting shows it actually
+  unblocks the beneficiary;
+* requeueing (§3.2.4): placement failures and preemptions return the job
+  to its tenant queue instead of deadlocking the pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .cluster import ClusterState
+from .job import Job, JobKind, JobState
+from .quota import QuotaManager, QuotaMode
+from .rsch import RSCH, ScheduleResult
+from .snapshot import FullSnapshotter, IncrementalSnapshotter, Snapshot
+
+
+class QueuePolicy(enum.Enum):
+    STRICT_FIFO = "strict-fifo"
+    BEST_EFFORT_FIFO = "best-effort-fifo"
+    BACKFILL = "backfill"
+
+
+@dataclasses.dataclass
+class QSCHConfig:
+    policy: QueuePolicy = QueuePolicy.BACKFILL
+    # Backfill: head job older than this (seconds of queue wait while
+    # blocked) may preempt backfilled jobs (Table 1).
+    backfill_head_timeout: float = 1800.0
+    # Priority preemption (§3.2.3): enabled but conservative.
+    priority_preemption: bool = True
+    # Upper bound on preemptions per cycle — keeps cascades in check
+    # ("conservative preemption policy", §3.2.3).
+    max_preemptions_per_cycle: int = 64
+
+
+@dataclasses.dataclass
+class CycleResult:
+    scheduled: List[Job] = dataclasses.field(default_factory=list)
+    preempted: List[Job] = dataclasses.field(default_factory=list)
+    blocked_head: Optional[Job] = None
+    snapshot_version: int = 0
+
+
+class QSCH:
+    def __init__(self, quota: QuotaManager, rsch: RSCH,
+                 config: Optional[QSCHConfig] = None,
+                 incremental_snapshots: bool = True) -> None:
+        self.quota = quota
+        self.rsch = rsch
+        self.config = config or QSCHConfig()
+        self.snapshotter = (IncrementalSnapshotter()
+                            if incremental_snapshots else FullSnapshotter())
+        # Tenant queues (§3.2.2): submission order is kept per tenant; the
+        # global pass merges by order_key.
+        self.queues: Dict[str, List[Job]] = {}
+        self.running: Dict[int, Job] = {}
+        # Head-of-line blocking bookkeeping for Backfill.
+        self._head_blocked_since: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    # Queue management
+    # ------------------------------------------------------------------
+    def submit(self, job: Job) -> None:
+        job.state = JobState.PENDING
+        self.queues.setdefault(job.tenant, []).append(job)
+
+    def requeue(self, job: Job) -> None:
+        """§3.2.4: failed/preempted workloads restart the pipeline."""
+        job.requeue_count += 1
+        job.state = JobState.PENDING
+        job.placement = None
+        job.backfilled = False
+        self.queues.setdefault(job.tenant, []).append(job)
+
+    def pending_jobs(self) -> List[Job]:
+        out: List[Job] = []
+        for q in self.queues.values():
+            out.extend(j for j in q if j.state is JobState.PENDING)
+        out.sort(key=Job.order_key)
+        return out
+
+    def queue_depth(self) -> int:
+        return len(self.pending_jobs())
+
+    def _remove_from_queue(self, job: Job) -> None:
+        q = self.queues.get(job.tenant, [])
+        if job in q:
+            q.remove(job)
+
+    # ------------------------------------------------------------------
+    # Admission (§3.2.1)
+    # ------------------------------------------------------------------
+    def _static_admit(self, job: Job) -> bool:
+        return self.quota.can_admit(job)
+
+    def _dynamic_admit(self, job: Job, snap: Snapshot) -> bool:
+        return self.rsch.feasible(job, snap)
+
+    # ------------------------------------------------------------------
+    # One scheduling cycle
+    # ------------------------------------------------------------------
+    def cycle(self, state: ClusterState, now: float) -> CycleResult:
+        result = CycleResult()
+        snap = self.snapshotter.take(state)
+        result.snapshot_version = snap.version
+        candidates = self.pending_jobs()
+        # Jobs failing static quota stay in the tenant queue and never
+        # enter the global pass (§3.2.2).
+        global_queue = [j for j in candidates if self._static_admit(j)]
+        if not global_queue:
+            return result
+
+        policy = self.config.policy
+        if policy is QueuePolicy.STRICT_FIFO:
+            self._cycle_strict(global_queue, state, snap, now, result)
+        elif policy is QueuePolicy.BEST_EFFORT_FIFO:
+            self._cycle_best_effort(global_queue, state, snap, now, result)
+        else:
+            self._cycle_backfill(global_queue, state, snap, now, result)
+
+        # Priority preemption (§3.2.3): if the highest-priority pending job
+        # is still blocked, conservatively evict strictly-lower-priority
+        # preemptible work that provably unblocks it.
+        if (self.config.priority_preemption and result.blocked_head
+                is not None):
+            self._try_priority_preemption(result.blocked_head, state, now,
+                                          result)
+        return result
+
+    # -- policy bodies --------------------------------------------------
+    def _cycle_strict(self, queue: List[Job], state: ClusterState,
+                      snap: Snapshot, now: float, result: CycleResult
+                      ) -> None:
+        """Table 1 Strict FIFO: one blocked head blocks everyone."""
+        for job in queue:
+            if not self._try_place(job, state, snap, now, result):
+                result.blocked_head = job
+                return
+            snap = self.snapshotter.take(state)
+
+    def _cycle_best_effort(self, queue: List[Job], state: ClusterState,
+                           snap: Snapshot, now: float, result: CycleResult
+                           ) -> None:
+        """Table 1 Best-Effort FIFO: skip unschedulable jobs.  No
+        preemption -> large jobs can starve (reproduced in Fig 4)."""
+        blocked: Optional[Job] = None
+        for job in queue:
+            if self._try_place(job, state, snap, now, result):
+                snap = self.snapshotter.take(state)
+            elif blocked is None:
+                blocked = job
+        # Note: deliberately do NOT set result.blocked_head -> no
+        # priority preemption assist; that is what distinguishes the
+        # policy in the paper's Fig 4 starvation result.
+
+    def _cycle_backfill(self, queue: List[Job], state: ClusterState,
+                        snap: Snapshot, now: float, result: CycleResult
+                        ) -> None:
+        """Table 1 Backfill: smaller jobs may run behind a blocked head;
+        after ``backfill_head_timeout`` the head preempts them."""
+        head = queue[0]
+        if self._try_place(head, state, snap, now, result):
+            self._head_blocked_since.pop(head.uid, None)
+            snap = self.snapshotter.take(state)
+            remaining = queue[1:]
+        else:
+            blocked_since = self._head_blocked_since.setdefault(
+                head.uid, now)
+            if now - blocked_since >= self.config.backfill_head_timeout:
+                self._backfill_preempt_for(head, state, now, result)
+                snap = self.snapshotter.take(state)
+                if self._try_place(head, state, snap, now, result):
+                    self._head_blocked_since.pop(head.uid, None)
+                    snap = self.snapshotter.take(state)
+                else:
+                    result.blocked_head = head
+            else:
+                result.blocked_head = head
+            remaining = queue[1:]
+        # Backfill pass: later jobs may use idle resources now.
+        for job in remaining:
+            if job.state is not JobState.PENDING:
+                continue
+            placed = self._try_place(job, state, snap, now, result,
+                                     backfilled=result.blocked_head
+                                     is not None)
+            if placed:
+                snap = self.snapshotter.take(state)
+
+    # -- placement ------------------------------------------------------
+    def _try_place(self, job: Job, state: ClusterState, snap: Snapshot,
+                   now: float, result: CycleResult,
+                   backfilled: bool = False) -> bool:
+        # Re-check static quota: earlier placements in this cycle may have
+        # consumed it since the global-queue filter ran (§3.2.1).
+        if not self._static_admit(job):
+            return False
+        if not self._dynamic_admit(job, snap):
+            return False
+        job.state = JobState.ADMITTED
+        job.admit_time = now
+        sched = self.rsch.schedule(job, snap)
+        if sched.placement is None:
+            # Dynamic admission passed but placement failed (fragmentation
+            # or topology): requeue mechanism (§3.2.4).
+            self._remove_from_queue(job)
+            self.requeue(job)
+            return False
+        self.quota.charge(job)
+        state.allocate(job, sched.placement)
+        job.placement = sched.placement
+        job.state = JobState.RUNNING
+        job.start_time = now
+        job.backfilled = backfilled
+        self._remove_from_queue(job)
+        self.running[job.uid] = job
+        result.scheduled.append(job)
+        return True
+
+    # -- lifecycle callbacks from the simulator --------------------------
+    def on_complete(self, job: Job, state: ClusterState, now: float) -> None:
+        if job.uid in self.running:
+            state.release(job.uid)
+            self.quota.refund(job)
+            del self.running[job.uid]
+        job.state = JobState.COMPLETED
+        job.end_time = now
+
+    def _preempt(self, job: Job, state: ClusterState, now: float,
+                 result: CycleResult) -> None:
+        state.release(job.uid)
+        self.quota.refund(job)
+        del self.running[job.uid]
+        job.state = JobState.PREEMPTED
+        job.preempt_count += 1
+        job.end_time = None
+        result.preempted.append(job)
+        self.requeue(job)
+
+    # -- preemption helpers (§3.2.3) --------------------------------------
+    def _backfill_preempt_for(self, head: Job, state: ClusterState,
+                              now: float, result: CycleResult) -> None:
+        """Backfill preemption: evict backfilled jobs (newest first) until
+        the head becomes feasible — but only if it provably can become
+        feasible (conservative policy)."""
+        victims = [j for j in self.running.values()
+                   if j.backfilled and j.preemptible
+                   and j.gpu_type == head.gpu_type]
+        victims.sort(key=lambda j: -(j.start_time or 0.0))
+        pool_free = state.pool_free(head.gpu_type)
+        reclaimable = sum(v.n_gpus for v in victims)
+        if pool_free + reclaimable < head.n_gpus:
+            return  # preemption cannot help; don't thrash
+        budget = self.config.max_preemptions_per_cycle
+        for victim in victims:
+            if budget <= 0:
+                break
+            snap = self.snapshotter.take(state)
+            if self._dynamic_admit(head, snap) and \
+                    self.rsch.schedule(head, snap).placement is not None:
+                return
+            self._preempt(victim, state, now, result)
+            budget -= 1
+
+    def _try_priority_preemption(self, job: Job, state: ClusterState,
+                                 now: float, result: CycleResult) -> None:
+        victims = [j for j in self.running.values()
+                   if j.priority < job.priority and j.preemptible
+                   and j.gpu_type == job.gpu_type]
+        if not victims:
+            # Quota reclamation preemption: shared-mode borrowers block the
+            # owner's quota (§3.2.3).
+            victims = self.quota.reclaim_candidates(
+                job.tenant, job.gpu_type, list(self.running.values()))
+        if not victims:
+            return
+        pool_free = state.pool_free(job.gpu_type)
+        reclaimable = sum(v.n_gpus for v in victims)
+        if pool_free + reclaimable < job.n_gpus:
+            return
+        victims.sort(key=lambda j: (j.priority, -(j.start_time or 0.0)))
+        budget = self.config.max_preemptions_per_cycle
+        for victim in victims:
+            if budget <= 0:
+                break
+            snap = self.snapshotter.take(state)
+            if self._dynamic_admit(job, snap):
+                break
+            self._preempt(victim, state, now, result)
+            budget -= 1
+        snap = self.snapshotter.take(state)
+        if self._dynamic_admit(job, snap):
+            self._try_place(job, state, snap, now, result)

@@ -1,0 +1,303 @@
+"""RSCH — the Resource-aware Scheduler (paper §3.3).
+
+RSCH turns an admitted job into a concrete :class:`Placement`:
+
+1. **Node-pool restriction** (§3.4.1): only nodes of the requested GPU
+   type are considered.
+2. **Two-level scheduling** (§3.4.2): first preselect NodeNetGroups
+   (LeafGroups) with enough free capacity, then select nodes inside the
+   chosen groups.
+3. **Strategy scoring** (§3.3.3/§3.3.4): Binpack, E-Binpack, Spread or
+   E-Spread via the shared fused filter+score pass
+   (:mod:`repro.core.scoring`, Pallas kernel in
+   :mod:`repro.kernels.node_score`).
+4. **Gang semantics** (§3.3.2): the whole job is placed transactionally —
+   if any pod cannot be placed the job stays pending and no state is
+   mutated.
+5. **Fine-grained device selection** (§3.3.1): within a node, pick the
+   healthy GPU combination with the best interconnect (NVLink island >
+   same-NUMA > cross-NUMA) and pair it with the island's RDMA NIC.
+6. **Topology awareness** (§3.3.5): groups are chosen to minimize the
+   number of NodeNetGroups (JTTED) preferring same-spine neighbours;
+   EP-style jobs can be pinned to a single HBD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cluster import ClusterState
+from .job import Job, JobKind, Placement, PodPlacement
+from .scoring import (BINPACK, E_BINPACK, E_SPREAD, NEG_INF, SPREAD,
+                      ScoreWeights, node_scores_np)
+from .snapshot import Snapshot
+from .topology import ClusterTopology
+
+
+class Strategy(enum.Enum):
+    BINPACK = "binpack"
+    E_BINPACK = "e-binpack"
+    SPREAD = "spread"
+    E_SPREAD = "e-spread"
+
+
+_WEIGHTS: Dict[Strategy, ScoreWeights] = {
+    Strategy.BINPACK: BINPACK,
+    Strategy.E_BINPACK: E_BINPACK,
+    Strategy.SPREAD: SPREAD,
+    Strategy.E_SPREAD: E_SPREAD,
+}
+
+
+@dataclasses.dataclass
+class RSCHConfig:
+    train_strategy: Strategy = Strategy.E_BINPACK
+    infer_strategy: Strategy = Strategy.E_SPREAD
+    # E-Spread (§3.3.4): inference pods smaller than this use the dedicated
+    # zone; everything else falls back to E-Binpack in the general pool.
+    espread_small_pod_gpus: int = 8
+    # Schedule EP-style jobs at HBD granularity (§3.3.5 Scale-Up).
+    hbd_granular_ep: bool = True
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    placement: Optional[Placement]
+    reason: str = ""
+    groups_used: int = 0
+
+
+class RSCH:
+    def __init__(self, topology: ClusterTopology,
+                 config: Optional[RSCHConfig] = None) -> None:
+        self.topology = topology
+        self.config = config or RSCHConfig()
+        self._link_class = topology.gpu_link_class()
+        self._nic = topology.nic_for_gpu()
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def strategy_for(self, job: Job) -> Strategy:
+        if job.kind is JobKind.INFER:
+            return self.config.infer_strategy
+        return self.config.train_strategy
+
+    def feasible(self, job: Job, snap: Snapshot) -> bool:
+        """Dynamic-resource-admission check (§3.2.1): are there enough
+        free, healthy GPUs in the job's node pool right now?"""
+        pool = (snap.gpu_type == job.gpu_type) & snap.node_healthy
+        per_node_ok = snap.free_gpus >= job.gpus_per_pod
+        capacity = int((snap.free_gpus // job.gpus_per_pod)[
+            pool & per_node_ok].sum())
+        return capacity >= job.n_pods
+
+    def schedule(self, job: Job, snap: Snapshot) -> ScheduleResult:
+        """Compute a placement against a snapshot.  Pure — commits happen
+        via ``ClusterState.allocate`` by the caller."""
+        strategy = self.strategy_for(job)
+        if (strategy is Strategy.E_SPREAD and job.kind is JobKind.INFER
+                and job.gpus_per_pod < self.config.espread_small_pod_gpus
+                and bool(snap.inference_zone.any())):
+            result = self._schedule_with_mask(
+                job, snap, Strategy.E_SPREAD,
+                node_filter=snap.inference_zone)
+            if result.placement is not None:
+                return result
+            # Remaining replicas: E-Binpack in the general pool (§3.3.4).
+            return self._schedule_with_mask(
+                job, snap, Strategy.E_BINPACK,
+                node_filter=~snap.inference_zone)
+        if strategy is Strategy.E_SPREAD:
+            # Large inference pods get consolidated full nodes in the
+            # general pool, keeping the dedicated zone for small
+            # replicas (§3.3.4); fall back to anywhere if it's full.
+            strategy = Strategy.E_BINPACK
+            if bool(snap.inference_zone.any()):
+                result = self._schedule_with_mask(
+                    job, snap, strategy,
+                    node_filter=~snap.inference_zone)
+                if result.placement is not None:
+                    return result
+        return self._schedule_with_mask(job, snap, strategy, None)
+
+    # ------------------------------------------------------------------
+    # Core two-level placement
+    # ------------------------------------------------------------------
+    def _schedule_with_mask(self, job: Job, snap: Snapshot,
+                            strategy: Strategy,
+                            node_filter: Optional[np.ndarray]
+                            ) -> ScheduleResult:
+        topo = self.topology
+        pool = (snap.gpu_type == job.gpu_type) & snap.node_healthy
+        if node_filter is not None:
+            pool = pool & node_filter
+        free = snap.free_gpus.copy()        # mutated as pods are placed
+        if not pool.any():
+            return ScheduleResult(None, "empty node pool")
+
+        # --- Level 1: NodeNetGroup preselection (§3.4.2) ---------------
+        enhanced = strategy in (Strategy.E_BINPACK, Strategy.E_SPREAD)
+        selected_groups = self._preselect_groups(job, snap, pool, free,
+                                                 enhanced, strategy)
+        if selected_groups is None:
+            return ScheduleResult(None, "no NodeNetGroup set satisfies job")
+        group_rank = {g: i for i, g in enumerate(selected_groups)}
+        in_groups = np.isin(topo.leaf_id, np.asarray(selected_groups))
+
+        # --- Level 2: node selection within selected groups ------------
+        weights = _WEIGHTS[strategy]
+        group_used = np.bincount(
+            topo.leaf_id, weights=np.where(pool, snap.used_gpus, 0),
+            minlength=topo.n_leaf_groups).astype(np.float32)
+        group_cap = np.bincount(
+            topo.leaf_id,
+            weights=np.where(pool, snap.gpu_healthy.sum(axis=1), 0),
+            minlength=topo.n_leaf_groups).astype(np.float32)
+        group_load = group_used / np.maximum(group_cap, 1.0)
+        # Preference for earlier-ranked (anchor) groups keeps a multi-pod
+        # job inside as few groups as possible (§3.3.3 LeafGroup E-Binpack).
+        topo_pref = np.zeros(topo.n_nodes, dtype=np.float32)
+        for g, rank in group_rank.items():
+            members = topo.leaf_id == g
+            topo_pref[members] = 1.0 / (1.0 + rank)
+
+        pods: List[PodPlacement] = []
+        busy = snap.gpu_busy.copy()
+        for _ in range(job.n_pods):
+            mask = pool & in_groups
+            scores = node_scores_np(
+                free, snap.used_gpus + 0, mask, group_load[topo.leaf_id],
+                topo_pref, job.gpus_per_pod, topo.gpus_per_node, weights)
+            # Same-node co-location bonus (node-level E-Binpack §3.3.3):
+            # pods of this job already on a node make it maximally
+            # attractive for the next pod.
+            if enhanced and pods and job.kind is not JobKind.INFER:
+                for p in pods:
+                    if scores[p.node] > NEG_INF:
+                        scores[p.node] += 2.0
+            node = int(np.argmax(scores))
+            if scores[node] <= NEG_INF:
+                return ScheduleResult(None, "gang placement failed")
+            gpus = self._pick_devices(busy[node], snap.gpu_healthy[node],
+                                      job.gpus_per_pod)
+            if gpus is None:
+                return ScheduleResult(None, "device-level selection failed")
+            busy[node, list(gpus)] = True
+            free[node] -= job.gpus_per_pod
+            pods.append(PodPlacement(node=node, gpu_indices=gpus,
+                                     nic=int(self._nic[gpus[0]])))
+        placement = Placement(pods=pods)
+        n_groups = len({int(topo.leaf_id[p.node]) for p in pods})
+        return ScheduleResult(placement, "ok", groups_used=n_groups)
+
+    # ------------------------------------------------------------------
+    def _preselect_groups(self, job: Job, snap: Snapshot, pool: np.ndarray,
+                          free: np.ndarray, enhanced: bool,
+                          strategy: Strategy) -> Optional[List[int]]:
+        """Pick an ordered list of candidate NodeNetGroups.
+
+        * small job + E-Binpack: busiest group that still fits (consolidate,
+          keep empty groups reserved for large jobs);
+        * spread strategies: all groups, emptiest first;
+        * large jobs: greedy minimal set of groups, preferring same-spine
+          neighbours (JTTED: fewest groups, closest topology).
+        """
+        topo = self.topology
+        # A node contributes floor(free/pod) pod slots.
+        pod_slots = np.where(pool, free // job.gpus_per_pod, 0)
+        group_slots = np.bincount(topo.leaf_id, weights=pod_slots,
+                                  minlength=topo.n_leaf_groups).astype(int)
+        group_free = np.bincount(topo.leaf_id, weights=np.where(pool, free, 0),
+                                 minlength=topo.n_leaf_groups).astype(int)
+        group_used = np.bincount(topo.leaf_id,
+                                 weights=np.where(pool, snap.used_gpus, 0),
+                                 minlength=topo.n_leaf_groups).astype(int)
+        candidates = np.nonzero(group_slots > 0)[0]
+        if len(candidates) == 0:
+            return None
+
+        if group_slots.sum() < job.n_pods:
+            return None
+
+        fits_one = candidates[group_slots[candidates] >= job.n_pods]
+        if len(fits_one) > 0:
+            if strategy in (Strategy.SPREAD, Strategy.E_SPREAD):
+                # Spread wants room: emptiest group first.
+                order = sorted(fits_one,
+                               key=lambda g: (-group_free[g], g))
+            elif enhanced:
+                # LeafGroup-level E-Binpack: busiest group that fits.
+                order = sorted(fits_one,
+                               key=lambda g: (-group_used[g],
+                                              group_free[g], g))
+            else:
+                # Plain binpack is node-level only: first fitting group by
+                # best node score; approximate with most-used group too but
+                # without reserving empties (same order, documented).
+                order = sorted(fits_one,
+                               key=lambda g: (-group_used[g], g))
+            return [int(order[0])]
+
+        # Multi-group job: greedy cover minimizing group count, preferring
+        # same-spine neighbours of the seed group (topology-aware §3.3.5).
+        seed_order = sorted(candidates, key=lambda g: (-group_slots[g], g))
+        seed = int(seed_order[0])
+        group_spine = topo.spine_id[np.searchsorted(
+            topo.leaf_id, np.arange(topo.n_leaf_groups))]
+        chosen: List[int] = [seed]
+        covered = int(group_slots[seed])
+        rest = [int(g) for g in candidates if g != seed]
+        rest.sort(key=lambda g: (
+            0 if group_spine[g] == group_spine[seed] else 1,
+            -group_slots[g], g))
+        for g in rest:
+            if covered >= job.n_pods:
+                break
+            chosen.append(g)
+            covered += int(group_slots[g])
+        if covered < job.n_pods:
+            return None
+        return chosen
+
+    # ------------------------------------------------------------------
+    # Fine-grained device selection (§3.3.1)
+    # ------------------------------------------------------------------
+    def _pick_devices(self, busy_row: np.ndarray, healthy_row: np.ndarray,
+                      k: int) -> Optional[Tuple[int, ...]]:
+        """Choose ``k`` healthy free GPU slots minimizing link-class cost.
+
+        Preference order: a single NVLink island, then a single NUMA
+        domain, then best-effort lowest link classes.
+        """
+        avail = np.nonzero(~busy_row & healthy_row)[0]
+        if len(avail) < k:
+            return None
+        cls = self._link_class
+        best: Optional[Tuple[int, ...]] = None
+        best_cost = None
+        # Candidate seedings: group available GPUs by NVLink island / NUMA.
+        islands: Dict[int, List[int]] = {}
+        for g in avail:
+            islands.setdefault(int(self._nic[g]), []).append(int(g))
+        for members in islands.values():
+            if len(members) >= k:
+                cand = tuple(members[:k])
+                cost = self._combo_cost(cand, cls)
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = cand, cost
+        if best is not None:
+            return best
+        # No single island fits: greedy fill ordered by island density.
+        ordered = sorted(avail, key=lambda g: (int(self._nic[g]), int(g)))
+        cand = tuple(int(g) for g in ordered[:k])
+        return cand
+
+    @staticmethod
+    def _combo_cost(combo: Sequence[int], cls: np.ndarray) -> int:
+        idx = np.asarray(combo)
+        return int(cls[np.ix_(idx, idx)].sum())

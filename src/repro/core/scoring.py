@@ -1,0 +1,68 @@
+"""Node filter+score pass shared by RSCH, the jnp oracle and the Pallas
+kernel.
+
+For every candidate node the scheduler computes one fused score
+
+    score[i] = valid[i] ? ( w_used  * used[i]/G
+                          + w_fit   * exact_fit[i]
+                          + w_group * group_load[i]
+                          + w_topo  * topo_pref[i] )
+             : -inf
+
+where ``valid[i] = mask[i] & (free[i] >= request)``.  Sign conventions on
+the weight vector select the strategy:
+
+* **Binpack / E-Binpack** (§3.3.3): ``w_used > 0`` packs busy nodes first,
+  ``w_fit`` rewards exact fits (leaves no fragment behind), ``w_group > 0``
+  consolidates into already-busy NodeNetGroups (LeafGroup-level E-Binpack),
+  ``w_topo > 0`` pulls pods of one job toward its anchor group.
+* **Spread / E-Spread** (§3.3.4): ``w_used < 0`` prefers idle nodes.
+
+This module is the *numpy* implementation used by the discrete-event
+simulator (cheap per call); ``repro.kernels.ref`` is the jnp oracle and
+``repro.kernels.node_score`` the Pallas TPU kernel.  All three are
+asserted identical in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+NEG_INF = float(np.finfo(np.float32).min)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScoreWeights:
+    used: float = 0.0
+    fit: float = 0.0
+    group: float = 0.0
+    topo: float = 0.0
+
+    def as_array(self) -> np.ndarray:
+        return np.asarray([self.used, self.fit, self.group, self.topo],
+                          dtype=np.float32)
+
+
+BINPACK = ScoreWeights(used=1.0, fit=0.5, group=0.0, topo=0.0)
+E_BINPACK = ScoreWeights(used=1.0, fit=0.5, group=0.75, topo=1.5)
+SPREAD = ScoreWeights(used=-1.0, fit=0.0, group=0.0, topo=0.0)
+E_SPREAD = ScoreWeights(used=-1.0, fit=0.0, group=-0.25, topo=0.0)
+
+
+def node_scores_np(free: np.ndarray, used: np.ndarray, mask: np.ndarray,
+                   group_load: np.ndarray, topo_pref: np.ndarray,
+                   request: int, gpus_per_node: int,
+                   weights: ScoreWeights) -> np.ndarray:
+    """Reference numpy implementation (semantics match the Pallas kernel)."""
+    free = free.astype(np.float32)
+    used = used.astype(np.float32)
+    valid = mask & (free >= float(request))
+    used_norm = used / float(gpus_per_node)
+    exact_fit = (free == float(request)).astype(np.float32)
+    score = (weights.used * used_norm
+             + weights.fit * exact_fit
+             + weights.group * group_load.astype(np.float32)
+             + weights.topo * topo_pref.astype(np.float32))
+    return np.where(valid, score, NEG_INF).astype(np.float32)

@@ -1,0 +1,116 @@
+"""Discrete-event cluster simulator driving QSCH + RSCH.
+
+Event kinds:
+
+* ``SUBMIT``  — a job arrives and enters its tenant queue;
+* ``TICK``    — a scheduling cycle fires (QSCH admission -> RSCH placement
+  -> binding);
+* ``END``     — a running job completes and releases devices.
+
+Binding latency (image pull, container start — §4.2) is modeled as a
+constant delay between scheduling completion and Running, but GPU-hours
+accrue from scheduling completion per the SOR definition.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+from .cluster import ClusterState
+from .job import Job, JobState
+from .metrics import MetricsRecorder
+from .qsch import QSCH, CycleResult
+from .quota import QuotaManager, QuotaMode
+
+
+@dataclasses.dataclass
+class SimConfig:
+    tick_interval: float = 30.0        # scheduling cycle period (s)
+    sample_interval: float = 300.0     # metric sampling period (s)
+    binding_latency: float = 45.0      # schedule->running delay (s)
+    horizon: Optional[float] = None    # stop time; default: drain
+
+
+@dataclasses.dataclass
+class SimResult:
+    jobs: List[Job]
+    metrics: MetricsRecorder
+    end_time: float
+    cycles: int
+    preemptions: int
+
+
+_SUBMIT, _END, _TICK, _SAMPLE = 0, 1, 2, 3
+
+
+class Simulator:
+    def __init__(self, state: ClusterState, qsch: QSCH,
+                 config: Optional[SimConfig] = None) -> None:
+        self.state = state
+        self.qsch = qsch
+        self.config = config or SimConfig()
+        self.metrics = MetricsRecorder(state.topology)
+        self._heap: List = []
+        self._seq = itertools.count()
+
+    def _push(self, t: float, kind: int, payload=None) -> None:
+        heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
+
+    def run(self, jobs: Sequence[Job]) -> SimResult:
+        cfg = self.config
+        jobs = sorted(jobs, key=lambda j: j.submit_time)
+        for j in jobs:
+            self._push(j.submit_time, _SUBMIT, j)
+        if jobs:
+            t0 = jobs[0].submit_time
+            self._push(t0, _TICK)
+            self._push(t0, _SAMPLE)
+        now = 0.0
+        cycles = 0
+        preemptions = 0
+        pending_ends: Dict[int, float] = {}
+
+        while self._heap:
+            now, kind, _, payload = heapq.heappop(self._heap)
+            if cfg.horizon is not None and now > cfg.horizon:
+                break
+            if kind == _SUBMIT:
+                self.qsch.submit(payload)
+            elif kind == _END:
+                job = payload
+                # A preempted job's stale END event must be ignored; the
+                # rescheduled run pushes a fresh one.
+                if (job.state is JobState.RUNNING
+                        and pending_ends.get(job.uid) == now):
+                    self.qsch.on_complete(job, self.state, now)
+                    self.metrics.on_job_finished(job)
+            elif kind == _TICK:
+                result = self.qsch.cycle(self.state, now)
+                cycles += 1
+                preemptions += len(result.preempted)
+                for job in result.scheduled:
+                    self.metrics.on_job_placed(job)
+                    job.run_time = now + cfg.binding_latency
+                    end = job.run_time + job.duration
+                    pending_ends[job.uid] = end
+                    self._push(end, _END, job)
+                # Keep ticking while anything is queued or running.
+                if self.qsch.queue_depth() or self.qsch.running \
+                        or self._has_future_submissions():
+                    self._push(now + cfg.tick_interval, _TICK)
+            elif kind == _SAMPLE:
+                self.metrics.sample(now, self.state,
+                                    self.qsch.queue_depth())
+                if self.qsch.queue_depth() or self.qsch.running \
+                        or self._has_future_submissions():
+                    self._push(now + cfg.sample_interval, _SAMPLE)
+        self.metrics.sample(now, self.state, self.qsch.queue_depth())
+        return SimResult(jobs=list(jobs), metrics=self.metrics,
+                         end_time=now, cycles=cycles,
+                         preemptions=preemptions)
+
+    def _has_future_submissions(self) -> bool:
+        return any(k == _SUBMIT for _, k, _, _ in self._heap)

@@ -1,0 +1,111 @@
+"""Scheduler snapshots: full deep copy vs incremental update (paper §3.4.3).
+
+Before each scheduling cycle the scheduler works on a consistent copy of
+the cluster state so in-flight mutations don't corrupt decisions.  The
+naive approach deep-copies everything each cycle; Kant's RSCH instead
+maintains a long-lived snapshot and copies only the rows dirtied since the
+last cycle.  The paper reports >50 % scheduler CPU reduction on a
+1 000-node cluster; ``benchmarks/snapshot_bench.py`` reproduces the
+comparison and ``tests/test_snapshot.py`` property-checks equivalence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .cluster import ClusterState
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """Immutable-by-convention array bundle RSCH scores against."""
+
+    free_gpus: np.ndarray       # (n_nodes,) int32
+    used_gpus: np.ndarray       # (n_nodes,) int32
+    gpu_busy: np.ndarray        # (n_nodes, G) bool
+    gpu_healthy: np.ndarray     # (n_nodes, G) bool
+    node_healthy: np.ndarray    # (n_nodes,) bool
+    gpu_type: np.ndarray        # (n_nodes,) int32
+    inference_zone: np.ndarray  # (n_nodes,) bool
+    version: int = 0
+
+
+class FullSnapshotter:
+    """Baseline: deep copy of every array, every cycle."""
+
+    name = "full-copy"
+
+    def __init__(self) -> None:
+        self._version = 0
+
+    def take(self, state: ClusterState) -> Snapshot:
+        self._version += 1
+        state.dirty_nodes.clear()  # parity with the incremental path
+        return Snapshot(
+            free_gpus=state.free_gpus().copy(),
+            used_gpus=state.used_gpus().copy(),
+            gpu_busy=state.gpu_busy.copy(),
+            gpu_healthy=state.gpu_healthy.copy(),
+            node_healthy=state.node_healthy.copy(),
+            gpu_type=state.gpu_type.copy(),
+            inference_zone=state.inference_zone.copy(),
+            version=self._version,
+        )
+
+
+class IncrementalSnapshotter:
+    """Kant's optimization: refresh only rows dirtied since last cycle.
+
+    The first ``take`` is a full copy; afterwards only
+    ``state.dirty_nodes`` rows are copied into the retained buffers.
+    """
+
+    name = "incremental"
+
+    def __init__(self) -> None:
+        self._snap: Optional[Snapshot] = None
+        self._version = 0
+        self.rows_copied = 0          # instrumentation for the benchmark
+
+    def take(self, state: ClusterState) -> Snapshot:
+        self._version += 1
+        if self._snap is None:
+            self._snap = FullSnapshotter().take(state)
+            self._snap.version = self._version
+            self.rows_copied += state.n_nodes
+            state.dirty_nodes.clear()
+            return self._snap
+
+        snap = self._snap
+        dirty = sorted(state.dirty_nodes)
+        if dirty:
+            idx = np.asarray(dirty, dtype=np.int64)
+            # Row-level refresh of every mutable field.
+            usable = state.gpu_healthy[idx] & ~state.gpu_busy[idx]
+            free = usable.sum(axis=1).astype(np.int32)
+            snap.free_gpus[idx] = np.where(state.node_healthy[idx], free, 0)
+            snap.used_gpus[idx] = (
+                state.gpu_busy[idx] & state.gpu_healthy[idx]
+            ).sum(axis=1).astype(np.int32)
+            snap.gpu_busy[idx] = state.gpu_busy[idx]
+            snap.gpu_healthy[idx] = state.gpu_healthy[idx]
+            snap.node_healthy[idx] = state.node_healthy[idx]
+            snap.gpu_type[idx] = state.gpu_type[idx]
+            snap.inference_zone[idx] = state.inference_zone[idx]
+            self.rows_copied += len(dirty)
+        state.dirty_nodes.clear()
+        snap.version = self._version
+        return snap
+
+
+def snapshots_equal(a: Snapshot, b: Snapshot) -> bool:
+    return (np.array_equal(a.free_gpus, b.free_gpus)
+            and np.array_equal(a.used_gpus, b.used_gpus)
+            and np.array_equal(a.gpu_busy, b.gpu_busy)
+            and np.array_equal(a.gpu_healthy, b.gpu_healthy)
+            and np.array_equal(a.node_healthy, b.node_healthy)
+            and np.array_equal(a.gpu_type, b.gpu_type)
+            and np.array_equal(a.inference_zone, b.inference_zone))

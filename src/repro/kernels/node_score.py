@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused node filter+score pass for RSCH.
+
+At high scheduling QPS on 10⁴–10⁵-node clusters, the per-cycle hot loop is
+"score every candidate node" (paper §3.4 attacks exactly this cost via
+search-space reduction and snapshot memory optimization).  On the TPU
+adaptation we additionally *fuse* the whole filter→score pipeline into a
+single VPU pass over the node table:
+
+* the node table (free, used, mask, group_load, topo_pref) is laid out as
+  flat f32/int32 vectors in HBM;
+* each grid step streams one ``(8, 128)``-aligned block into VMEM via the
+  BlockSpec index map, evaluates the fused predicate+polynomial, and
+  writes the score block back;
+* invalid nodes get ``-inf`` so downstream ``argmax`` needs no extra mask.
+
+The node axis is padded to the block size by ``ops.py``; padding rows have
+``mask = 0`` so they score ``-inf`` and can never win the argmax.
+
+Scalar parameters (request size, strategy weights) are closed over as
+Python floats — there are only a handful of strategies and pod sizes, so
+the recompile space is tiny and the kernel body stays branch-free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+# One VMEM tile: sublane × lane = (8, 128) for f32 — the native TPU vector
+# register tiling; the node table is reshaped to (-1, LANE) rows.
+SUBLANE = 8
+LANE = 128
+BLOCK_ROWS = 64  # rows of 128 lanes per grid step -> 8192 nodes per block
+
+
+def _score_kernel(free_ref, used_ref, mask_ref, gload_ref, topo_ref,
+                  out_ref, *, request: float, inv_g: float, w_used: float,
+                  w_fit: float, w_group: float, w_topo: float) -> None:
+    """Kernel body: one (BLOCK_ROWS, LANE) tile of the node table."""
+    free = free_ref[...].astype(jnp.float32)
+    used = used_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]
+    gload = gload_ref[...]
+    topo = topo_ref[...]
+    valid = (mask != 0) & (free >= request)
+    exact = (free == request).astype(jnp.float32)
+    score = (w_used * used * inv_g + w_fit * exact
+             + w_group * gload + w_topo * topo)
+    out_ref[...] = jnp.where(valid, score, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "request", "gpus_per_node", "w_used", "w_fit", "w_group", "w_topo",
+    "interpret"))
+def node_scores_pallas(free: jnp.ndarray, used: jnp.ndarray,
+                       mask: jnp.ndarray, group_load: jnp.ndarray,
+                       topo_pref: jnp.ndarray, *, request: int,
+                       gpus_per_node: int, w_used: float, w_fit: float,
+                       w_group: float, w_topo: float,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Score a 2-D node table of shape (rows, LANE).
+
+    ``rows`` must be a multiple of ``BLOCK_ROWS``; callers go through
+    :func:`repro.kernels.ops.node_scores` which pads and reshapes.
+    """
+    rows, lane = free.shape
+    if lane != LANE:
+        raise ValueError(f"lane dim must be {LANE}, got {lane}")
+    if rows % BLOCK_ROWS:
+        raise ValueError(f"rows ({rows}) must be a multiple of "
+                         f"{BLOCK_ROWS}")
+    grid = (rows // BLOCK_ROWS,)
+    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
+    kernel = functools.partial(
+        _score_kernel, request=float(request),
+        inv_g=1.0 / float(gpus_per_node), w_used=float(w_used),
+        w_fit=float(w_fit), w_group=float(w_group), w_topo=float(w_topo))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk(), blk(), blk(), blk(), blk()],
+        out_specs=blk(),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(free.astype(jnp.int32), used.astype(jnp.int32),
+      mask.astype(jnp.int32), group_load.astype(jnp.float32),
+      topo_pref.astype(jnp.float32))

@@ -1,0 +1,97 @@
+"""Public entry point for the node-scoring kernel.
+
+``node_scores`` accepts the natural 1-D node-table layout, pads/reshapes
+to the kernel's (rows, 128) tiling, dispatches to either the Pallas TPU
+kernel or the pure-jnp oracle, and slices the padding back off.  Padding
+rows carry ``mask = 0`` so they can never win the downstream argmax.
+
+Backend selection:
+
+* ``backend="pallas"``       — compiled Pallas kernel (TPU target);
+* ``backend="interpret"``    — Pallas in interpret mode (CPU validation);
+* ``backend="ref"``          — jnp oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.scoring import ScoreWeights
+from . import node_score as _ns
+from .ref import node_scores_ref
+
+_ROW = _ns.LANE * _ns.BLOCK_ROWS
+
+
+def _pad_to(x: jnp.ndarray, n: int, fill=0) -> jnp.ndarray:
+    pad = n - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((pad,), fill, dtype=x.dtype)], axis=0)
+
+
+def node_scores(free, used, mask, group_load, topo_pref, *, request: int,
+                gpus_per_node: int,
+                weights: Optional[ScoreWeights] = None,
+                w_used: float = 0.0, w_fit: float = 0.0,
+                w_group: float = 0.0, w_topo: float = 0.0,
+                backend: str = "ref") -> jnp.ndarray:
+    """Fused filter+score over an n-node table; returns (n,) f32 scores
+    with ``-inf`` at invalid nodes."""
+    if weights is not None:
+        w_used, w_fit = weights.used, weights.fit
+        w_group, w_topo = weights.group, weights.topo
+    free = jnp.asarray(free)
+    n = free.shape[0]
+    kw = dict(request=request, gpus_per_node=gpus_per_node, w_used=w_used,
+              w_fit=w_fit, w_group=w_group, w_topo=w_topo)
+
+    if backend == "ref":
+        return node_scores_ref(free, jnp.asarray(used), jnp.asarray(mask),
+                               jnp.asarray(group_load),
+                               jnp.asarray(topo_pref), **kw)
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    padded = max(_ROW, -(-n // _ROW) * _ROW)
+    rows = padded // _ns.LANE
+    args2d = []
+    for arr, fill in ((free, 0), (used, 0), (mask, 0),
+                      (group_load, 0.0), (topo_pref, 0.0)):
+        a = _pad_to(jnp.asarray(arr), padded, fill)
+        args2d.append(a.reshape(rows, _ns.LANE))
+    out = _ns.node_scores_pallas(
+        *args2d, interpret=(backend == "interpret"), **kw)
+    return out.reshape(padded)[:n]
+
+
+def best_node(free, used, mask, group_load, topo_pref, *, request: int,
+              gpus_per_node: int, weights: ScoreWeights,
+              backend: str = "ref") -> int:
+    """Argmax helper; returns -1 when no node is valid."""
+    scores = node_scores(free, used, mask, group_load, topo_pref,
+                         request=request, gpus_per_node=gpus_per_node,
+                         weights=weights, backend=backend)
+    idx = int(jnp.argmax(scores))
+    if float(scores[idx]) <= _ns.NEG_INF:
+        return -1
+    return idx
+
+
+def wkv6(r, k, v, w, u, s0, *, backend: str = "ref", tb: int = 256):
+    """RWKV-6 WKV recurrence — kernel entry point.
+
+    backend: "pallas" (compiled, TPU) | "interpret" (Pallas on CPU) |
+    "ref" (jnp oracle).  See kernels/wkv6.py for the VMEM-residency
+    argument; rwkv6.time_mix can call this in place of its step scan.
+    """
+    from .ref import wkv6_ref
+    if backend == "ref":
+        return wkv6_ref(r, k, v, w, u, s0)
+    from .wkv6 import wkv6_pallas
+    return wkv6_pallas(r, k, v, w, u, s0, tb=tb,
+                       interpret=(backend == "interpret"))

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, CPU train/serve
+drivers, and the Kant placement -> mesh co-scheduling bridge."""

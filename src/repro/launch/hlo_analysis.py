@@ -1,0 +1,445 @@
+"""Trip-count-aware analysis of optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE, regardless
+of trip count — our layer stacks, attention chunk loops and recurrent
+scans are all ``lax.scan``s, so raw numbers undercount by 1–3 orders of
+magnitude.  This module re-derives the three roofline inputs from
+``compiled.as_text()`` with loop multipliers taken from the
+``known_trip_count`` backend config XLA attaches to counted loops:
+
+* **flops** — 2·|out|·K for every ``dot`` (K = product of the lhs
+  contracting dims), |out| per elementwise/reduce op (fusion bodies are
+  recursed into);
+* **bytes** — per top-level op: operand + output sizes (fusions count
+  their boundary only — internal traffic stays in registers), with
+  ``dynamic-update-slice`` special-cased to 2×|update| (in-place);
+* **collective_bytes** — operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, by kind.
+
+Shapes in partitioned HLO are per-device, so every number here is
+per-device; the roofline divides by per-chip peak rates directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
+                "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\((.*)$")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_TRAFFIC = {"parameter", "get-tuple-element", "tuple", "bitcast",
+               "constant", "iota", "after-all", "partition-id",
+               "replica-id", "rng-bit-generator", "opt-barrier"}
+
+_ELEMENTWISE_FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "power", "negate",
+    "abs", "sign", "floor", "ceil", "cosine", "sine", "logistic",
+    "select", "clamp", "compare", "and", "or", "not", "xor",
+    "reduce", "convert", "expm1", "log1p", "atan2", "remainder",
+}
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVE_KINDS})
+
+    def __iadd__(self, other: "Cost") -> "Cost":
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k in COLLECTIVE_KINDS:
+            self.coll[k] += other.coll[k]
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll.items()})
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    types: List[Tuple[str, Tuple[int, ...]]]   # result shapes (tuple-flat)
+    opcode: str
+    operands: List[str]
+    rest: str                                  # attribute tail of the line
+
+    def out_bytes(self) -> int:
+        return sum(_nbytes(d, s) for d, s in self.types)
+
+    def out_elems(self) -> int:
+        total = 0
+        for _, s in self.types:
+            n = 1
+            for d in s:
+                n *= d
+            total += n
+        return total
+
+
+def _nbytes(dtype: str, shape: Tuple[int, ...]) -> int:
+    n = _DTYPE_BYTES.get(dtype, 4)
+    for d in shape:
+        n *= d
+    return n
+
+
+def _parse_types(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(s):
+        dims = tuple(int(d) for d in m.group(2).split(",")) \
+            if m.group(2) else ()
+        out.append((m.group(1), dims))
+    return out
+
+
+def _split_operands(argstr: str) -> List[str]:
+    """Operand names from the text inside op(...) — balanced to depth 0."""
+    out, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    names = []
+    for tok in out:
+        m = re.search(r"%([\w.\-]+)", tok)
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+class HloModule:
+    def __init__(self, text: str) -> None:
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        # name -> Instr, per computation
+        self.defs: Dict[str, Dict[str, Instr]] = {
+            c: {i.name: i for i in instrs}
+            for c, instrs in self.computations.items()}
+        self._memo: Dict[str, Cost] = {}
+
+    # -- parsing ---------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        for raw in text.splitlines():
+            line = re.sub(r"/\*.*?\*/", "", raw).rstrip()
+            s = line.strip()
+            header = re.match(r"^(ENTRY\s+)?%([\w.\-]+)\s*\(.*->.*\{", s)
+            if header and not line.startswith(" "):
+                current = header.group(2)
+                self.computations[current] = []
+                if header.group(1):
+                    self.entry = current
+                continue
+            if s == "}":
+                continue
+            if current is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, types, opcode, rest = m.groups()
+            self.computations[current].append(Instr(
+                name=name, types=_parse_types(types), opcode=opcode,
+                operands=_split_operands(rest), rest=rest))
+
+    # -- cost ------------------------------------------------------------
+    def _operand_shape(self, comp: str, name: str
+                       ) -> Optional[Tuple[str, Tuple[int, ...]]]:
+        instr = self.defs.get(comp, {}).get(name)
+        if instr and instr.types:
+            return instr.types[0]
+        return None
+
+    def _dot_flops(self, comp: str, instr: Instr) -> float:
+        m = _LHS_CDIMS_RE.search(instr.rest)
+        k = 1
+        if m and instr.operands:
+            lhs = self._operand_shape(comp, instr.operands[0])
+            if lhs:
+                dims = [int(d) for d in m.group(1).split(",")
+                        if d != ""]
+                for d in dims:
+                    if d < len(lhs[1]):
+                        k *= lhs[1][d]
+        return 2.0 * instr.out_elems() * k
+
+    def _instr_bytes(self, comp: str, instr: Instr) -> float:
+        if instr.opcode in _NO_TRAFFIC:
+            return 0.0
+        if instr.opcode == "dynamic-update-slice":
+            # In-place: read + write the updated slice only.
+            upd = (self._operand_shape(comp, instr.operands[1])
+                   if len(instr.operands) > 1 else None)
+            return 2.0 * (_nbytes(*upd) if upd else instr.out_bytes())
+        if instr.opcode in ("dynamic-slice", "slice", "gather"):
+            # Reads only the sliced window, not the whole operand.
+            return 2.0 * instr.out_bytes()
+        if instr.opcode == "fusion":
+            return self._fusion_bytes(comp, instr)
+        total = float(instr.out_bytes())
+        for op in instr.operands:
+            shp = self._operand_shape(comp, op)
+            if shp:
+                total += _nbytes(*shp)
+        return total
+
+    def _fusion_bytes(self, comp: str, instr: Instr) -> float:
+        """Fusion boundary traffic, with slice-aware operand accounting.
+
+        * If a fusion parameter is consumed exclusively by dynamic-slice /
+          slice / gather ops inside the fused computation (the layer-scan
+          reads one layer's weights from the stacked tensor this way), the
+          fusion reads only the slices — not the full stacked operand.
+        * If the fusion ROOT is a ``dynamic-update-slice`` (scan stacking
+          its per-step output into a loop-carried buffer), XLA updates the
+          buffer in place: traffic is read+write of the *updated slice*,
+          and the aliased full-size buffer operand costs nothing.  Without
+          this, a 4096-step scan writing a (4096, ...) history is billed
+          the full history per step — a ~4096x over-count (found while
+          profiling rwkv6 train_4k; see EXPERIMENTS.md §Perf iteration 0).
+        """
+        called = _CALLS_RE.search(instr.rest)
+        inner_name = called.group(1) if called else ""
+        inner = self.computations.get(inner_name, [])
+        root = inner[-1] if inner else None     # HLO prints the root last
+        inner_defs = self.defs.get(inner_name, {})
+        # A root that is an elementwise chain (convert/bitcast/copy) over a
+        # DUS is the same in-place stacking pattern with a dtype cast fused
+        # in (jax stacks bf16 residuals via f32: convert-dus-convert); the
+        # emitter still updates in place, so bill the slice, not the stack.
+        while root is not None and \
+                root.opcode in ("convert", "bitcast", "copy") \
+                and root.operands:
+            root = inner_defs.get(root.operands[0])
+        # param index -> name inside the fused computation
+        param_names: Dict[int, str] = {}
+        for fi in inner:
+            if fi.opcode == "parameter":
+                m = re.match(r"(\d+)\)", fi.rest)
+                if m:
+                    param_names[int(m.group(1))] = fi.name
+        aliased_param: Optional[str] = None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            upd = (self._operand_shape(inner_name, root.operands[1])
+                   if len(root.operands) > 1 else None)
+            # read + write of the updated window only
+            total = 2.0 * (_nbytes(*upd) if upd else instr.out_bytes())
+            # trace the in-place buffer back through bitcast/copy/convert
+            # to its fusion parameter — aliased, not re-read
+            name = root.operands[0] if root.operands else ""
+            while name in inner_defs and \
+                    inner_defs[name].opcode in ("bitcast", "copy",
+                                                "convert"):
+                ops = inner_defs[name].operands
+                if not ops:
+                    break
+                name = ops[0]
+            if name in inner_defs and \
+                    inner_defs[name].opcode == "parameter":
+                aliased_param = name
+        else:
+            total = float(instr.out_bytes())
+        for i, op in enumerate(instr.operands):
+            shp = self._operand_shape(comp, op)
+            if not shp:
+                continue
+            pname = param_names.get(i)
+            if pname is not None and pname == aliased_param:
+                continue                      # in-place DUS buffer
+            if pname is not None and inner:
+                consumers = [fi for fi in inner
+                             if pname in fi.operands]
+                if consumers and all(
+                        fi.opcode in ("dynamic-slice", "slice", "gather")
+                        for fi in consumers):
+                    total += sum(fi.out_bytes() for fi in consumers)
+                    continue
+            total += _nbytes(*shp)
+        return total
+
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        for instr in self.computations.get(comp, []):
+            op = instr.opcode
+            base = op.replace("-start", "")
+            if base in COLLECTIVE_KINDS and not op.endswith("-done"):
+                # XLA's CPU pipeline promotes bf16 all-reduces to f32
+                # (to_apply=%..._promoted, operand via a convert fusion);
+                # TPUs reduce native bf16, so bill the pre-promotion size.
+                promoted = "promoted" in instr.rest
+                for name in instr.operands:
+                    shp = self._operand_shape(comp, name)
+                    if shp:
+                        n = _nbytes(*shp)
+                        if promoted and shp[0] == "f32":
+                            n //= 2
+                        total.coll[base] += n
+                total.bytes += self._instr_bytes(comp, instr)
+                continue
+            if op == "while":
+                body = _BODY_RE.search(instr.rest)
+                cond = _COND_RE.search(instr.rest)
+                trip = _TRIP_RE.search(instr.rest)
+                n = int(trip.group(1)) if trip else 1
+                if body:
+                    total += self.computation_cost(body.group(1)).scaled(n)
+                if cond:
+                    total += self.computation_cost(cond.group(1)).scaled(n)
+                continue
+            if op == "conditional":
+                m = _BRANCH_RE.search(instr.rest)
+                if m:
+                    branches = [b.strip().lstrip("%")
+                                for b in m.group(1).split(",")]
+                    costs = [self.computation_cost(b) for b in branches]
+                    if costs:
+                        # worst case branch
+                        best = max(costs, key=lambda c: c.flops + c.bytes)
+                        total += best
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter", "select-and-scatter"):
+                called = _CALLS_RE.search(instr.rest)
+                if called:
+                    inner = self.computation_cost(called.group(1))
+                    total.flops += inner.flops
+                    for k in COLLECTIVE_KINDS:
+                        total.coll[k] += inner.coll[k]
+                total.bytes += self._instr_bytes(comp, instr)
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(comp, instr)
+                total.bytes += self._instr_bytes(comp, instr)
+                continue
+            if op in _ELEMENTWISE_FLOP:
+                total.flops += instr.out_elems()
+            total.bytes += self._instr_bytes(comp, instr)
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.computation_cost(self.entry)
+
+
+def top_contributors(mod: "HloModule", metric: str = "flops",
+                     n: int = 20) -> List[Tuple[float, str, str, str]]:
+    """The dry-run 'profile': heaviest instructions by loop-weighted cost.
+
+    Returns [(weighted_value, opcode, result_type, jax op_name), ...].
+    ``metric`` is 'flops', 'bytes' or 'coll'.
+    """
+    # computation -> total loop multiplier (entry = 1)
+    mult: Dict[str, float] = {mod.entry: 1.0}
+    order = [mod.entry]
+    while order:
+        comp = order.pop()
+        m = mult[comp]
+        for instr in mod.computations.get(comp, []):
+            if instr.opcode == "while":
+                body = _BODY_RE.search(instr.rest)
+                cond = _COND_RE.search(instr.rest)
+                trip = _TRIP_RE.search(instr.rest)
+                k = int(trip.group(1)) if trip else 1
+                for g in (body, cond):
+                    if g:
+                        mult[g.group(1)] = mult.get(g.group(1), 0) + m * k
+                        order.append(g.group(1))
+            else:
+                called = _CALLS_RE.search(instr.rest)
+                if called and instr.opcode in ("call", "conditional"):
+                    mult[called.group(1)] = mult.get(called.group(1),
+                                                     0) + m
+                    order.append(called.group(1))
+    rows: List[Tuple[float, str, str, str]] = []
+    for comp, m in mult.items():
+        for instr in mod.computations.get(comp, []):
+            if instr.opcode in ("while",):
+                continue
+            if metric == "flops":
+                if instr.opcode == "dot":
+                    val = mod._dot_flops(comp, instr)
+                elif instr.opcode in ("fusion", "custom-call"):
+                    called = _CALLS_RE.search(instr.rest)
+                    val = (mod.computation_cost(called.group(1)).flops
+                           if called else 0.0)
+                elif instr.opcode in _ELEMENTWISE_FLOP:
+                    val = float(instr.out_elems())
+                else:
+                    val = 0.0
+            elif metric == "bytes":
+                val = mod._instr_bytes(comp, instr)
+            else:
+                base = instr.opcode.replace("-start", "")
+                if base in COLLECTIVE_KINDS and \
+                        not instr.opcode.endswith("-done"):
+                    promoted = "promoted" in instr.rest
+                    val = 0.0
+                    for o in instr.operands:
+                        shp = mod._operand_shape(comp, o)
+                        if shp:
+                            n = _nbytes(*shp)
+                            if promoted and shp[0] == "f32":
+                                n //= 2
+                            val += n
+                else:
+                    val = 0.0
+            if val > 0:
+                meta = re.search(r'op_name="([^"]*)"', instr.rest)
+                rows.append((val * m, instr.opcode,
+                             instr.types[0][0] + str(list(
+                                 instr.types[0][1])) if instr.types else "",
+                             meta.group(1) if meta else instr.name))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]
+
+
+def analyse_hlo_text(text: str) -> Dict[str, object]:
+    mod = HloModule(text)
+    cost = mod.entry_cost()
+    return {
+        "flops_per_device": cost.flops,
+        "bytes_per_device": cost.bytes,
+        "collective_bytes_per_device": cost.collective_bytes,
+        "collectives": dict(cost.coll),
+    }

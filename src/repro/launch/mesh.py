@@ -1,0 +1,32 @@
+"""Production meshes (deliverable e).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and everything else must keep seeing the single real CPU device.
+
+Target hardware: TPU v5e — one pod = 16×16 = 256 chips
+(``data`` × ``model``); two pods = 512 chips with a leading ``pod`` axis
+(DCN between pods, ICI within).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(n_data: int = 1, n_model: int = 1):
+    """Tiny mesh over the real devices for CPU-scale examples/tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis (§Roofline).
+PEAK_FLOPS_BF16 = 197e12       # per chip, FLOP/s
+HBM_BW = 819e9                 # per chip, bytes/s
+ICI_BW = 50e9                  # per link, bytes/s

@@ -1,0 +1,69 @@
+"""Dry-run profiler: heaviest HLO instructions for one (arch × shape).
+
+The CPU container has no TPU timings, so the "profile" is the
+loop-weighted per-instruction cost of the partitioned HLO
+(`hlo_analysis.top_contributors`).  This is what the §Perf hillclimb
+iterates against.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.profile \
+        --arch rwkv6-3b --shape train_4k --metric bytes --top 25
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402
+import argparse
+
+from .dryrun import lower_combo, analyse
+from .mesh import make_production_mesh
+from ..configs import SHAPES, get_arch
+from .hlo_analysis import HloModule, top_contributors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--metric", default="bytes",
+                    choices=["bytes", "flops", "coll"])
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--bf16-moments", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    n_chips = int(mesh.devices.size)
+    lowered = lower_combo(cfg, shape, mesh, remat=not args.no_remat,
+                          microbatches=args.microbatches,
+                          seq_shard=args.seq_shard,
+                          bf16_moments=args.bf16_moments)
+    result = analyse(lowered, cfg, shape, n_chips)
+    print(f"{args.arch} × {args.shape} × "
+          f"{'2x16x16' if args.multi_pod else '16x16'}")
+    print(f"  compute {result['compute_term_s']:.3e}s  "
+          f"memory {result['memory_term_s']:.3e}s  "
+          f"collective {result['collective_term_s']:.3e}s  "
+          f"dominant={result['dominant_term']}  "
+          f"useful={result['useful_flops_ratio']:.3f}")
+    print(f"\ntop-{args.top} instructions by loop-weighted {args.metric}:")
+    mod = HloModule(lowered.compile().as_text())
+    total = {"bytes": result["memory_term_s"] * 819e9,
+             "flops": result["compute_term_s"] * 197e12,
+             "coll": result["collective_term_s"] * 50e9}[args.metric]
+    for val, opcode, rtype, opname in top_contributors(
+            mod, metric=args.metric, n=args.top):
+        frac = val / total if total else 0.0
+        print(f"  {val:12.4e} ({frac:6.1%})  {opcode:22s} {rtype:26s} "
+              f"{opname[:90]}")
+
+
+if __name__ == "__main__":
+    main()

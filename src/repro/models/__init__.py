@@ -1,0 +1,5 @@
+"""Model zoo: the workloads Kant schedules (see DESIGN.md §3)."""
+
+from .model import Model
+
+__all__ = ["Model"]

@@ -1,0 +1,46 @@
+"""Stub modality frontends (the one allowed carve-out, see DESIGN.md).
+
+The audio (mel-spectrogram + conformer feature extractor) and vision
+(ViT/SigLIP + projector) frontends are NOT implemented; these helpers
+produce *shape-correct* precomputed embeddings — deterministic
+pseudo-random for smoke tests, ``ShapeDtypeStruct`` for the dry-run —
+that the fully-implemented transformer backbones consume.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+# llava-next anyres tiling: base 24×24 patch grid = 576 tokens per tile.
+VLM_PATCHES = 576
+
+
+def patch_embeds(cfg: ArchConfig, batch: int, dtype=jnp.float32,
+                 seed: int = 0) -> jnp.ndarray:
+    """Vision stub: (B, n_prefix, d_model) patch embeddings."""
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, (batch, cfg.n_prefix, cfg.d_model))
+            * 0.02).astype(dtype)
+
+
+def patch_embed_spec(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16
+                     ) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((batch, cfg.n_prefix, cfg.d_model), dtype)
+
+
+def frame_embeds(cfg: ArchConfig, batch: int, seq_len: int,
+                 dtype=jnp.float32, seed: int = 0) -> jnp.ndarray:
+    """Audio stub: (B, seq_len // enc_seq_divisor, d_model) frames."""
+    n = max(1, seq_len // cfg.enc_seq_divisor)
+    key = jax.random.PRNGKey(seed + 1)
+    return (jax.random.normal(key, (batch, n, cfg.d_model)) * 0.02
+            ).astype(dtype)
+
+
+def frame_embed_spec(cfg: ArchConfig, batch: int, seq_len: int,
+                     dtype=jnp.bfloat16) -> jax.ShapeDtypeStruct:
+    n = max(1, seq_len // cfg.enc_seq_divisor)
+    return jax.ShapeDtypeStruct((batch, n, cfg.d_model), dtype)

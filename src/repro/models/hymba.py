@@ -1,0 +1,136 @@
+"""Hymba hybrid block: parallel attention + Mamba(SSM) heads
+[arXiv:2411.13676].
+
+Each layer projects the input once and feeds *both* a sliding-window GQA
+attention branch and a Mamba-style selective-SSM branch; the two outputs
+are independently normalized and averaged (the paper's "parallel hybrid
+head" design).  Most Hymba layers use SWA — we window every layer (noted
+in DESIGN.md) which is what makes the long_500k decode shape O(window).
+
+SSM branch (diagonal selective scan, state size N = ``ssm_state``)::
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + Δ_t ⊙ (x_t ⊗ B_t)
+    y_t = h_t · C_t + D ⊙ x_t
+
+with input-dependent Δ, B, C (the Mamba selectivity).  Decode carries
+``h`` explicitly — O(1) state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain
+from .layers import (Params, dense_init, init_attn, rmsnorm, spec,
+                     spec_attn)
+
+DT_RANK = 32
+
+
+def init_ssm(key, d_model: int, n_state: int, dtype,
+             out_scale: float = 1.0) -> Params:
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d_model, d_model), dtype),
+        "w_bc": dense_init(ks[1], (d_model, 2 * n_state), dtype),
+        "w_dt": dense_init(ks[2], (d_model, DT_RANK), dtype),
+        "w_dt2": dense_init(ks[3], (DT_RANK, d_model), dtype),
+        "a_log": jnp.zeros((d_model, n_state), dtype),   # A = -exp(a_log)
+        "d_skip": jnp.ones((d_model,), dtype),
+        "w_out": dense_init(ks[4], (d_model, d_model), dtype,
+                            scale=out_scale / math.sqrt(d_model)),
+    }
+
+
+def spec_ssm(d_model: int, n_state: int, dtype) -> Params:
+    return {
+        "w_in": spec((d_model, d_model), dtype),
+        "w_bc": spec((d_model, 2 * n_state), dtype),
+        "w_dt": spec((d_model, DT_RANK), dtype),
+        "w_dt2": spec((DT_RANK, d_model), dtype),
+        "a_log": spec((d_model, n_state), dtype),
+        "d_skip": spec((d_model,), dtype),
+        "w_out": spec((d_model, d_model), dtype),
+    }
+
+
+def ssm_state_shape(batch: int, d_model: int, n_state: int
+                    ) -> Tuple[int, int, int]:
+    return (batch, d_model, n_state)
+
+
+def _ssm_inputs(p: Params, x: jnp.ndarray):
+    """x: (B, T, d) -> (u, dt, B_t, C_t) selective-scan inputs."""
+    u = constrain(jax.nn.silu(x @ p["w_in"]),
+                  ("batch", None, "model"))              # (B,T,d)
+    bc = x @ p["w_bc"]
+    n = p["a_log"].shape[-1]
+    B_t, C_t = bc[..., :n], bc[..., n:]                     # (B,T,N)
+    dt = jax.nn.softplus((x @ p["w_dt"]) @ p["w_dt2"])      # (B,T,d)
+    return u, dt, B_t, C_t
+
+
+def ssm_scan(p: Params, x: jnp.ndarray, h0: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence selective scan.  x: (B,T,d); h0: (B,d,N)."""
+    B, T, d = x.shape
+    u, dt, B_t, C_t = _ssm_inputs(p, x)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))            # (d,N)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                           # (B,d),(B,d),(B,N),(B,N)
+        decay = jnp.exp(dt_t[..., None] * A[None])          # (B,d,N)
+        h = decay * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (u.transpose(1, 0, 2).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B_t.transpose(1, 0, 2).astype(jnp.float32),
+          C_t.transpose(1, 0, 2).astype(jnp.float32))
+    h, yT = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = yT.transpose(1, 0, 2).astype(x.dtype)
+    y = y + u * p["d_skip"]
+    return (y @ p["w_out"]), h
+
+
+def ssm_step(p: Params, x: jnp.ndarray, h: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token selective scan.  x: (B,1,d); h: (B,d,N)."""
+    u, dt, B_t, C_t = _ssm_inputs(p, x)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    u1, dt1 = u[:, 0].astype(jnp.float32), dt[:, 0].astype(jnp.float32)
+    b1, c1 = B_t[:, 0].astype(jnp.float32), C_t[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt1[..., None] * A[None])
+    h = decay * h.astype(jnp.float32) + (dt1 * u1)[..., None] * b1[:, None]
+    y = jnp.einsum("bdn,bn->bd", h, c1)[:, None, :].astype(x.dtype)
+    y = y + u * p["d_skip"]
+    return (y @ p["w_out"]), h
+
+
+def init_hymba_block(key, d_model: int, n_heads: int, n_kv: int,
+                     head_dim: int, n_state: int, dtype,
+                     out_scale: float = 1.0) -> Params:
+    ka, ks, _ = jax.random.split(key, 3)
+    return {
+        "attn": init_attn(ka, d_model, n_heads, n_kv, head_dim, dtype,
+                          out_scale=out_scale),
+        "ssm": init_ssm(ks, d_model, n_state, dtype, out_scale=out_scale),
+        "norm_attn_out": jnp.ones((d_model,), dtype),
+        "norm_ssm_out": jnp.ones((d_model,), dtype),
+    }
+
+
+def spec_hymba_block(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                     n_state: int, dtype) -> Params:
+    return {
+        "attn": spec_attn(d_model, n_heads, n_kv, head_dim, dtype),
+        "ssm": spec_ssm(d_model, n_state, dtype),
+        "norm_attn_out": spec((d_model,), dtype),
+        "norm_ssm_out": spec((d_model,), dtype),
+    }

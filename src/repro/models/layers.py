@@ -1,0 +1,359 @@
+"""Transformer building blocks shared by every family in the zoo.
+
+Everything here is pure-functional JAX: parameters are plain dict pytrees
+created by ``init_*`` helpers (or described by ``spec_*`` twins returning
+``ShapeDtypeStruct`` for the allocation-free dry-run).
+
+Attention is implemented *chunked* (flash-style streaming softmax over KV
+blocks, and over Q blocks) so the 32k-prefill shape never materializes an
+S×S score matrix — the TPU-native adaptation of memory-bound attention,
+kept in pure JAX because Kant's contribution has no attention kernel
+(see DESIGN.md).  Decode uses a ring-buffer KV cache so the windowed
+long-context variant (long_500k) is O(window), not O(seq).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import axis_size, constrain
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def spec(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def pad_axis(x: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
+    pad = to - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5
+            ) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    exponents = jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    freqs = 1.0 / (theta ** exponents)                    # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0,
+                      q_offset: int = 0, q_chunk: int = 2048,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """GQA attention without materializing the full score matrix.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Kh, hd) with H = Kh * G.
+    ``q_offset`` is the absolute position of q[0] relative to k[0].
+    ``window > 0`` restricts each query to the last ``window`` keys.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = 1.0 / math.sqrt(hd)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    Sq_p, Sk_p = round_up(Sq, q_chunk), round_up(Sk, kv_chunk)
+    # Heads stay FLAT (B,S,H,hd): a (Kh,G) reshape of a model-sharded H
+    # axis defeats XLA's SPMD propagation (involuntary full remat);
+    # instead K/V blocks are broadcast to H heads inside the scan body —
+    # flop-free, block-sized, and every einsum keeps H cleanly sharded.
+    q = pad_axis(q, 1, Sq_p)
+    k = pad_axis(k, 1, Sk_p)
+    v = pad_axis(v, 1, Sk_p)
+    n_q, n_k = Sq_p // q_chunk, Sk_p // kv_chunk
+    # (n_k, B, kv_chunk, Kh, hd) so the scan streams one block at a time.
+    ks = k.reshape(B, n_k, kv_chunk, Kh, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_k, kv_chunk, Kh, hd).transpose(1, 0, 2, 3, 4)
+
+    # Attention-chunk layout: shard heads over ``model`` when the head
+    # count divides it; otherwise shard the q-chunk (sequence) dim — with
+    # indivisible head counts (llava 56, hymba 25, llama4 40 on a 16-way
+    # axis) the head fallback replicated every f32 chunk buffer AND the
+    # score/PV compute on all 16 model shards (llava train_4k memory term
+    # 363 s; §Perf notes).  q-sequence sharding keeps the whole q-block
+    # pipeline local: kb/vb are broadcast, scores and PV shard over Sq.
+    m_size = axis_size("model")
+    head_sharded = H % m_size == 0 and H >= m_size
+    hspec = ("batch", None, "model") if head_sharded \
+        else ("batch", "model", None)
+    hspec4 = hspec + (None,)
+
+    def q_body(_, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qb = constrain(qb, hspec4)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        acc0 = constrain(jnp.zeros((B, q_chunk, H, hd), jnp.float32),
+                         hspec4)
+        m0 = constrain(jnp.full((B, q_chunk, H), NEG_INF, jnp.float32),
+                       hspec)
+        l0 = constrain(jnp.zeros((B, q_chunk, H), jnp.float32), hspec)
+
+        def kv_body(carry, inputs):
+            kb, vb, ki = inputs
+            acc, m, l = carry
+            # GQA: broadcast Kh -> H (head h uses kv head h // G).
+            kb = constrain(jnp.repeat(kb, G, axis=2),
+                           ("batch", None, "model", None))
+            vb = constrain(jnp.repeat(vb, G, axis=2),
+                           ("batch", None, "model", None))
+            kv_idx = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = kv_idx[None, :] < Sk                    # pad rows out
+            if causal:
+                mask &= kv_idx[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= kv_idx[None, :] > q_pos[:, None] - window
+            s = jnp.einsum("bthd,bshd->bths", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bths,bshd->bthd", p, vb.astype(jnp.float32))
+            return (acc, m_new, l), None
+
+        (acc, m, l), _ = jax.lax.scan(kv_body, (acc0, m0, l0),
+                                      (ks, vs, jnp.arange(n_k)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(n_q))
+    # (n_q, B, q_chunk, H, hd) -> (B, Sq, H, hd)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq_p, H, hd)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, dtype,
+             out_scale: float = 1.0) -> Params:
+    """``out_scale`` rescales the residual-output projection (GPT-2 style
+    1/sqrt(2L)): without it the backward pass amplifies ~2x per layer and
+    deep stacks see 1e7+ grad norms at init (found by train_e2e.py)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype,
+                                 scale=out_scale / math.sqrt(d_ff))}
+
+
+def spec_mlp(d_model: int, d_ff: int, dtype) -> Params:
+    return {"w_gate": spec((d_model, d_ff), dtype),
+            "w_up": spec((d_model, d_ff), dtype),
+            "w_down": spec((d_ff, d_model), dtype)}
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("model",))
+    return constrain(h @ p["w_down"],
+                     ("batch",) + (None,) * (h.ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + apply for all three modes)
+# ---------------------------------------------------------------------------
+def init_attn(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype, out_scale: float = 1.0) -> Params:
+    # Explicit scales: wq/wk/wv are 3D (d_model, heads, head_dim) tensors
+    # contracting over dim 0, so dense_init's shape[-2] fan-in guess would
+    # be `heads` — 8x too hot for 512/8, saturating the softmax forward
+    # and exploding the backward ~2x/layer (found by examples/train_e2e;
+    # see EXPERIMENTS.md deep-stack init note).
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    proj = 1.0 / math.sqrt(d_model)
+    return {
+        "wq": dense_init(kq, (d_model, n_heads, head_dim), dtype,
+                         scale=proj),
+        "wk": dense_init(kk, (d_model, n_kv, head_dim), dtype, scale=proj),
+        "wv": dense_init(kv, (d_model, n_kv, head_dim), dtype, scale=proj),
+        "wo": dense_init(ko, (n_heads, head_dim, d_model), dtype,
+                         scale=out_scale / math.sqrt(n_heads * head_dim)),
+    }
+
+
+def spec_attn(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype) -> Params:
+    return {
+        "wq": spec((d_model, n_heads, head_dim), dtype),
+        "wk": spec((d_model, n_kv, head_dim), dtype),
+        "wv": spec((d_model, n_kv, head_dim), dtype),
+        "wo": spec((n_heads, head_dim, d_model), dtype),
+    }
+
+
+def self_attention(p: Params, x: jnp.ndarray, *, theta: float,
+                   causal: bool = True, window: int = 0,
+                   positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]),
+                  ("batch", None, "model", None))
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]),
+                  ("batch", None, "model", None))
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]),
+                  ("batch", None, "model", None))
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    o = chunked_attention(q, k, v, causal=causal, window=window)
+    return constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"]),
+                     ("batch", None, None))
+
+
+def cross_attention(p: Params, x: jnp.ndarray, memory_k: jnp.ndarray,
+                    memory_v: jnp.ndarray) -> jnp.ndarray:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]),
+                  ("batch", None, "model", None))
+    o = chunked_attention(q, memory_k, memory_v, causal=False)
+    return constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"]),
+                     ("batch", None, None))
+
+
+def memory_kv(p: Params, memory: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    return k, v
+
+
+def prefill_attention(p: Params, x: jnp.ndarray, cache_window: int, *,
+                      theta: float, window: int = 0
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill: full causal attention AND return the ring-buffer KV cache
+    covering the last ``cache_window`` positions."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wq"]),
+                  ("batch", None, "model", None))
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wk"]),
+                  ("batch", None, "model", None))
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, p["wv"]),
+                  ("batch", None, "model", None))
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    o = chunked_attention(q, k, v, causal=True, window=window)
+    out = constrain(jnp.einsum("bshk,hkd->bsd", o, p["wo"]),
+                    ("batch", None, None))
+    k_cache, v_cache = ring_from_prefill(k, cache_window), \
+        ring_from_prefill(v, cache_window)
+    return out, k_cache, v_cache
+
+
+def ring_from_prefill(kv: jnp.ndarray, W: int) -> jnp.ndarray:
+    """Arrange the last ``W`` positions of a (B,S,Kh,hd) tensor into ring
+    order: slot i holds position p with p ≡ i (mod W)."""
+    B, S, Kh, hd = kv.shape
+    if S <= W:
+        return pad_axis(kv, 1, W)
+    tail = kv[:, S - W:]                     # positions S-W .. S-1
+    # position (S-W+j) goes to slot (S-W+j) mod W; roll accomplishes this.
+    return jnp.roll(tail, shift=(S - W) % W, axis=1)
+
+
+def decode_attention(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len, *, theta: float,
+                     window: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                               jnp.ndarray]:
+    """Single-token decode against a ring-buffer KV cache.
+
+    x: (B, 1, d).  k_cache/v_cache: (B, W, Kh, hd).  ``cache_len`` is the
+    number of tokens already in history (= absolute position of x).
+    Slot i holds absolute position p = cache_len - ((cache_len - i) mod W).
+    """
+    B = x.shape[0]
+    W = k_cache.shape[1]
+    hd = p["wq"].shape[-1]
+    pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = apply_rope(q, pos, theta)
+    k = apply_rope(k, pos, theta)
+    slot = jnp.mod(cache_len, W)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    idx = jnp.arange(W)
+    abs_pos = cache_len - jnp.mod(cache_len - idx, W)
+    valid = abs_pos >= 0
+    if window > 0:
+        valid &= abs_pos > cache_len - window
+    Kh = k_cache.shape[2]
+    G = q.shape[2] // Kh
+    qf = q.reshape(B, 1, Kh, G, hd).astype(jnp.float32)
+    s = jnp.einsum("btkgh,bskh->btkgs", qf,
+                   k_cache.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btkgs,bskh->btkgh", w,
+                   v_cache.astype(jnp.float32)).astype(x.dtype)
+    o = o.reshape(B, 1, q.shape[2], hd)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+def init_embed(key, vocab: int, d_model: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)

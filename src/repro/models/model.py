@@ -1,0 +1,466 @@
+"""Unified model builder: ``ArchConfig`` -> init / forward / prefill /
+decode for every family in the zoo (dense, moe, ssm, hybrid, encdec, vlm).
+
+Design notes
+------------
+* **Stacked layers + ``lax.scan``** — per-layer parameters are stacked
+  along a leading ``L`` axis and the forward pass scans over them.  This
+  keeps the HLO one-layer-sized, which is what makes the 512-device CPU
+  dry-run compile tractable for 88-layer models.
+* **Three modes** — ``forward`` (training, teacher-forced logits),
+  ``prefill`` (same pass but emits the ring-buffer KV/SSM cache),
+  ``decode_step`` (one token against the cache).  Tests assert prefill +
+  step-wise decode reproduces ``forward`` logits exactly.
+* **Spec twins** — ``param_specs`` / ``cache_specs`` mirror ``init`` /
+  ``init_cache`` with ``ShapeDtypeStruct`` so the multi-pod dry-run never
+  allocates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.context import constrain
+from . import hymba as hy
+from . import moe as moe_mod
+from . import rwkv6 as rw
+from .layers import (Params, chunked_attention, cross_attention,
+                     decode_attention, embed, init_attn, init_embed,
+                     init_mlp, memory_kv, pad_axis, prefill_attention,
+                     rmsnorm, self_attention, spec, spec_attn, spec_mlp)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Block init/spec per family
+# ---------------------------------------------------------------------------
+def _residual_out_scale(n_layers: int) -> float:
+    """GPT-2/Megatron depth scaling for residual-output projections:
+    keeps the backward pass ~O(1) per layer instead of compounding
+    (16-layer stacks showed 1e7+ init grad norms without it)."""
+    return 1.0 / math.sqrt(max(1, 2 * n_layers))
+
+
+def _init_block(cfg: ArchConfig, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    rs = _residual_out_scale(cfg.n_layers)
+    if cfg.family == "ssm":
+        return rw.init_rwkv_block(key, d, f, cfg.head_dim or 64, dtype,
+                                  out_scale=rs)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": jnp.ones((d,), dtype),
+                 "norm2": jnp.ones((d,), dtype)}
+    if cfg.family == "hybrid":
+        p.update(hy.init_hymba_block(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim, cfg.ssm_state, dtype,
+                                     out_scale=rs))
+        p["mlp"] = init_mlp(k2, d, f, dtype, out_scale=rs)
+        return p
+    p["attn"] = init_attn(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype, out_scale=rs)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(k2, d, f, cfg.n_experts, dtype,
+                                    out_scale=rs)
+    else:
+        p["mlp"] = init_mlp(k2, d, f, dtype, out_scale=rs)
+    if cfg.family == "encdec":
+        p["norm_x"] = jnp.ones((d,), dtype)
+        p["xattn"] = init_attn(k3, d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype, out_scale=rs)
+    return p
+
+
+def _spec_block(cfg: ArchConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.family == "ssm":
+        return rw.spec_rwkv_block(d, f, cfg.head_dim or 64, dtype)
+    p: Params = {"norm1": spec((d,), dtype), "norm2": spec((d,), dtype)}
+    if cfg.family == "hybrid":
+        p.update(hy.spec_hymba_block(d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim, cfg.ssm_state, dtype))
+        p["mlp"] = spec_mlp(d, f, dtype)
+        return p
+    p["attn"] = spec_attn(d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.spec_moe(d, f, cfg.n_experts, dtype)
+    else:
+        p["mlp"] = spec_mlp(d, f, dtype)
+    if cfg.family == "encdec":
+        p["norm_x"] = spec((d,), dtype)
+        p["xattn"] = spec_attn(d, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, dtype)
+    return p
+
+
+def _enc_init_block(cfg: ArchConfig, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    rs = _residual_out_scale(cfg.n_enc_layers)
+    k1, k2 = jax.random.split(key)
+    return {"norm1": jnp.ones((d,), dtype), "norm2": jnp.ones((d,), dtype),
+            "attn": init_attn(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, dtype, out_scale=rs),
+            "mlp": init_mlp(k2, d, f, dtype, out_scale=rs)}
+
+
+def _enc_spec_block(cfg: ArchConfig, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"norm1": spec((d,), dtype), "norm2": spec((d,), dtype),
+            "attn": spec_attn(d, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim, dtype),
+            "mlp": spec_mlp(d, f, dtype)}
+
+
+def _stack_specs(tree: PyTree, n: int) -> PyTree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters -----------------------------------------------------
+    def init(self, key, dtype=jnp.float32) -> Params:
+        cfg = self.cfg
+        ke, kl, kh, kenc = jax.random.split(key, 4)
+        layer_keys = jax.random.split(kl, cfg.n_layers)
+        params: Params = {
+            "embed": init_embed(ke, cfg.vocab, cfg.d_model, dtype),
+            "layers": jax.vmap(
+                lambda k: _init_block(cfg, k, dtype))(layer_keys),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+            "lm_head": init_embed(kh, cfg.vocab, cfg.d_model, dtype).T,
+        }
+        if cfg.n_enc_layers:
+            enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+            params["encoder"] = jax.vmap(
+                lambda k: _enc_init_block(cfg, k, dtype))(enc_keys)
+            params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        return params
+
+    def param_specs(self, dtype=jnp.bfloat16) -> Params:
+        cfg = self.cfg
+        params: Params = {
+            "embed": spec((cfg.vocab, cfg.d_model), dtype),
+            "layers": _stack_specs(_spec_block(cfg, dtype), cfg.n_layers),
+            "final_norm": spec((cfg.d_model,), dtype),
+            "lm_head": spec((cfg.d_model, cfg.vocab), dtype),
+        }
+        if cfg.n_enc_layers:
+            params["encoder"] = _stack_specs(_enc_spec_block(cfg, dtype),
+                                             cfg.n_enc_layers)
+            params["enc_norm"] = spec((cfg.d_model,), dtype)
+        return params
+
+    def n_params(self) -> int:
+        import numpy as _np
+        specs = self.param_specs()
+        return int(sum(int(_np.prod(s.shape))
+                       for s in jax.tree.leaves(specs)))
+
+    def n_active_params(self) -> int:
+        """MoE: count top_k of n_experts expert params; else n_params."""
+        cfg = self.cfg
+        total = self.n_params()
+        if cfg.family != "moe":
+            return total
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_layers
+        inactive = expert * (cfg.n_experts - cfg.top_k)
+        return total - inactive
+
+    # -- input assembly ---------------------------------------------------
+    def _input_seq(self, params: Params, batch: Dict[str, jnp.ndarray]
+                   ) -> jnp.ndarray:
+        """Token embeddings, with the VLM patch prefix spliced in front."""
+        x = embed(params["embed"], batch["tokens"])
+        if self.cfg.family == "vlm":
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(x.dtype), x], axis=1)
+        return constrain(x, ("batch", "seq", None))
+
+    def _encode(self, params: Params, enc_embeds: jnp.ndarray
+                ) -> jnp.ndarray:
+        """Encoder stack over precomputed frame embeddings (audio stub)."""
+        cfg = self.cfg
+
+        def body(x, lp):
+            h = x + self_attention(lp["attn"], rmsnorm(x, lp["norm1"],
+                                                       cfg.norm_eps),
+                                   theta=cfg.rope_theta, causal=False)
+            from .layers import mlp as _mlp
+            h = h + _mlp(lp["mlp"], rmsnorm(h, lp["norm2"], cfg.norm_eps))
+            return h, None
+
+        x, _ = jax.lax.scan(body, enc_embeds.astype(params["embed"].dtype),
+                            params["encoder"])
+        return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- full-sequence pass (training / prefill) ---------------------------
+    def _seq_block(self, lp: Params, x: jnp.ndarray, *,
+                   memory: Optional[jnp.ndarray], cache_window: int,
+                   emit_cache: bool
+                   ) -> Tuple[jnp.ndarray, Optional[Params], jnp.ndarray]:
+        """Apply one decoder block to the full sequence.
+
+        Returns (x, cache_entry or None, aux_loss)."""
+        cfg = self.cfg
+        from .layers import mlp as _mlp
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family == "ssm":
+            B = x.shape[0]
+            st0 = jnp.zeros(rw.rwkv_state_shape(B, cfg.d_model,
+                                                cfg.head_dim or 64),
+                            jnp.float32)
+            xt = rmsnorm(x, lp["ln_t"], cfg.norm_eps)
+            t_out, st, xl_t = rw.time_mix(lp, xt, st0,
+                                          jnp.zeros_like(xt[:, 0]))
+            x = x + t_out
+            xc = rmsnorm(x, lp["ln_c"], cfg.norm_eps)
+            c_out, xl_c = rw.channel_mix(lp, xc, jnp.zeros_like(xc[:, 0]))
+            x = x + c_out
+            cache = ({"state": st, "x_last_t": xl_t, "x_last_c": xl_c}
+                     if emit_cache else None)
+            return x, cache, aux
+
+        h_in = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        cache: Optional[Params] = None
+        if emit_cache:
+            a_out, k_c, v_c = prefill_attention(
+                lp["attn"], h_in, cache_window, theta=cfg.rope_theta,
+                window=cfg.window)
+        else:
+            a_out = self_attention(lp["attn"], h_in, theta=cfg.rope_theta,
+                                   window=cfg.window)
+        if cfg.family == "hybrid":
+            B = x.shape[0]
+            s_out, h_ssm = hy.ssm_scan(
+                lp["ssm"], h_in,
+                jnp.zeros(hy.ssm_state_shape(B, cfg.d_model,
+                                             cfg.ssm_state), jnp.float32))
+            a_out = rmsnorm(a_out, lp["norm_attn_out"], cfg.norm_eps)
+            s_out = rmsnorm(s_out, lp["norm_ssm_out"], cfg.norm_eps)
+            x = x + 0.5 * (a_out + s_out)
+            if emit_cache:
+                cache = {"k": k_c, "v": v_c, "ssm": h_ssm}
+        else:
+            x = x + a_out
+            if emit_cache:
+                cache = {"k": k_c, "v": v_c}
+        if cfg.family == "encdec":
+            xm = rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+            mk, mv = memory_kv(lp["xattn"], memory)
+            x = x + cross_attention(lp["xattn"], xm, mk, mv)
+        h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m_out, aux = moe_mod.moe_ffn(lp["moe"], h2, top_k=cfg.top_k,
+                                         capacity_factor=cfg.capacity_factor)
+            x = x + m_out
+        else:
+            x = x + _mlp(lp["mlp"], h2)
+        return x, cache, aux
+
+    def _run_layers(self, params: Params, x: jnp.ndarray, *,
+                    memory: Optional[jnp.ndarray], cache_window: int,
+                    emit_cache: bool, remat: bool = False
+                    ) -> Tuple[jnp.ndarray, Optional[PyTree], jnp.ndarray]:
+        def body(carry, lp):
+            h, aux_acc = carry
+            h = constrain(h, ("batch", "seq", None))
+            h, cache, aux = self._seq_block(
+                lp, h, memory=memory, cache_window=cache_window,
+                emit_cache=emit_cache)
+            h = constrain(h, ("batch", "seq", None))
+            return (h, aux_acc + aux), cache
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux), caches = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.float32)), params["layers"])
+        return x, caches, aux
+
+    # -- public entry points ------------------------------------------------
+    def forward(self, params: Params, batch: Dict[str, jnp.ndarray], *,
+                remat: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Teacher-forced logits over the full sequence.
+
+        Returns (logits (B, S_out, vocab), aux loss scalar)."""
+        cfg = self.cfg
+        memory = (self._encode(params, batch["enc_embeds"])
+                  if cfg.n_enc_layers else None)
+        x = self._input_seq(params, batch)
+        x, _, aux = self._run_layers(params, x, memory=memory,
+                                     cache_window=1, emit_cache=False,
+                                     remat=remat)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.family == "vlm":                  # only text positions score
+            x = x[:, batch["patch_embeds"].shape[1]:]
+        # V over "model": keeps dlogits / d(lm_head) transients sharded in
+        # the backward — unconstrained, SPMD all-gathers a full f32 vocab
+        # matrix per device (1.6 GB on mistral-large; §Perf iteration log).
+        logits = constrain(x @ params["lm_head"], ("batch", None, "model"))
+        return logits, aux
+
+    # -- caches -----------------------------------------------------------
+    def cache_window(self, seq_len: int) -> int:
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return 1                            # O(1) recurrent state
+        w = cfg.window if cfg.window > 0 else seq_len
+        return min(seq_len, w, cfg.decode_window)
+
+    def _layer_cache_spec(self, B: int, W: int, dtype) -> PyTree:
+        cfg = self.cfg
+        hd, Kh = cfg.head_dim, cfg.n_kv_heads
+        if cfg.family == "ssm":
+            H = cfg.d_model // (cfg.head_dim or 64)
+            n = cfg.head_dim or 64
+            return {"state": spec((B, H, n, n), jnp.float32),
+                    "x_last_t": spec((B, cfg.d_model), dtype),
+                    "x_last_c": spec((B, cfg.d_model), dtype)}
+        entry = {"k": spec((B, W, Kh, hd), dtype),
+                 "v": spec((B, W, Kh, hd), dtype)}
+        if cfg.family == "hybrid":
+            entry["ssm"] = spec((B, cfg.d_model, cfg.ssm_state),
+                                jnp.float32)
+        return entry
+
+    def cache_specs(self, B: int, seq_len: int, dtype=jnp.bfloat16
+                    ) -> PyTree:
+        cfg = self.cfg
+        W = self.cache_window(seq_len)
+        cache: PyTree = {
+            "layers": _stack_specs(self._layer_cache_spec(B, W, dtype),
+                                   cfg.n_layers),
+            "t": spec((), jnp.int32),
+        }
+        if cfg.n_enc_layers:
+            S_enc = max(1, seq_len // cfg.enc_seq_divisor)
+            mem = {"mk": spec((cfg.n_layers, B, S_enc, cfg.n_kv_heads,
+                               cfg.head_dim), dtype),
+                   "mv": spec((cfg.n_layers, B, S_enc, cfg.n_kv_heads,
+                               cfg.head_dim), dtype)}
+            cache["memory"] = mem
+        return cache
+
+    def init_cache(self, B: int, seq_len: int, dtype=jnp.float32) -> PyTree:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_specs(B, seq_len, dtype))
+
+    # -- prefill ------------------------------------------------------------
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray],
+                seq_len: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, PyTree]:
+        """Run the prompt; return (last-position logits (B, vocab), cache).
+
+        ``seq_len`` sizes the cache window (defaults to the prompt length,
+        i.e. full-history cache)."""
+        cfg = self.cfg
+        memory = (self._encode(params, batch["enc_embeds"])
+                  if cfg.n_enc_layers else None)
+        x = self._input_seq(params, batch)
+        S_total = x.shape[1]
+        W = self.cache_window(seq_len or S_total)
+        x, caches, _ = self._run_layers(params, x, memory=memory,
+                                        cache_window=W, emit_cache=True)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["lm_head"]
+        cache: PyTree = {"layers": caches,
+                         "t": jnp.asarray(S_total, jnp.int32)}
+        if cfg.n_enc_layers:
+            mk, mv = jax.vmap(memory_kv, in_axes=(0, None))(
+                params["layers"]["xattn"], memory)
+            cache["memory"] = {"mk": mk, "mv": mv}
+        return logits, cache
+
+    # -- decode ---------------------------------------------------------------
+    def _decode_block(self, lp: Params, x: jnp.ndarray, cache: PyTree,
+                      t, memory_layer: Optional[PyTree]
+                      ) -> Tuple[jnp.ndarray, PyTree]:
+        cfg = self.cfg
+        from .layers import mlp as _mlp
+        if cfg.family == "ssm":
+            xt = rmsnorm(x, lp["ln_t"], cfg.norm_eps)
+            t_out, st, xl_t = rw.time_mix_decode(lp, xt, cache["state"],
+                                                 cache["x_last_t"])
+            x = x + t_out
+            xc = rmsnorm(x, lp["ln_c"], cfg.norm_eps)
+            c_out, xl_c = rw.channel_mix(lp, xc, cache["x_last_c"])
+            x = x + c_out
+            return x, {"state": st, "x_last_t": xl_t, "x_last_c": xl_c}
+
+        h_in = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        new_cache = dict(cache)
+        if cfg.family == "hybrid":
+            a_out, k_c, v_c = decode_attention(
+                lp["attn"], h_in, cache["k"], cache["v"], t,
+                theta=cfg.rope_theta, window=cfg.window)
+            s_out, h_ssm = hy.ssm_step(lp["ssm"], h_in, cache["ssm"])
+            a_out = rmsnorm(a_out, lp["norm_attn_out"], cfg.norm_eps)
+            s_out = rmsnorm(s_out, lp["norm_ssm_out"], cfg.norm_eps)
+            x = x + 0.5 * (a_out + s_out)
+            new_cache.update(k=k_c, v=v_c, ssm=h_ssm)
+        else:
+            a_out, k_c, v_c = decode_attention(
+                lp["attn"], h_in, cache["k"], cache["v"], t,
+                theta=cfg.rope_theta, window=cfg.window)
+            x = x + a_out
+            new_cache.update(k=k_c, v=v_c)
+        if cfg.family == "encdec":
+            xm = rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+            x = x + cross_attention(lp["xattn"], xm, memory_layer["mk"],
+                                    memory_layer["mv"])
+        h2 = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            m_out, _ = moe_mod.moe_ffn(lp["moe"], h2, top_k=cfg.top_k,
+                                       capacity_factor=cfg.capacity_factor)
+            x = x + m_out
+        else:
+            x = x + _mlp(lp["mlp"], h2)
+        return x, new_cache
+
+    def decode_step(self, params: Params, cache: PyTree,
+                    token: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, PyTree]:
+        """One decode step.  token: (B,) int32.  Returns (logits (B,vocab),
+        updated cache)."""
+        cfg = self.cfg
+        x = embed(params["embed"], token[:, None])
+        t = cache["t"]
+
+        if cfg.n_enc_layers:
+            xs = (params["layers"], cache["layers"],
+                  {"mk": cache["memory"]["mk"],
+                   "mv": cache["memory"]["mv"]})
+
+            def body(h, inp):
+                lp, lc, mem = inp
+                h, nc = self._decode_block(lp, h, lc, t, mem)
+                return h, nc
+        else:
+            xs = (params["layers"], cache["layers"])
+
+            def body(h, inp):
+                lp, lc = inp
+                h, nc = self._decode_block(lp, h, lc, t, None)
+                return h, nc
+
+        x = constrain(x, ("batch", "seq", None))
+        x, new_layer_caches = jax.lax.scan(body, x, xs)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["lm_head"]
+        new_cache = dict(cache)
+        new_cache["layers"] = new_layer_caches
+        new_cache["t"] = t + 1
+        return logits, new_cache

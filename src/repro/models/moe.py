@@ -1,0 +1,152 @@
+"""Mixture-of-Experts FFN with GShard-style grouped capacity dispatch.
+
+Dispatch is *flop-honest* and *sharding-preserving*:
+
+* tokens are dispatched **per batch row** (the GShard "group" axis): each
+  row computes its own router top-k, position-in-expert cumsum and
+  capacity ``C = cf·S·k/E``.  The group axis is exactly the axis the
+  auto-sharder puts on (``pod``, ``data``), so dispatch, expert compute
+  and combine all stay batch-sharded — a single *global* capacity buffer
+  would be replicated by SPMD and burn ``data``-axis-many times the
+  FLOPs (measured: 16×; see EXPERIMENTS.md §Perf notes);
+* scatter/gather into the ``(B, E, C, d)`` buffer costs no matmul FLOPs,
+  so compiled FLOPs scale with ``top_k`` (active experts), not
+  ``n_experts`` — what MODEL_FLOPS = 6·N_active·D expects;
+* tokens overflowing a row's per-expert capacity are dropped (standard
+  GShard/Switch semantics); the auxiliary load-balance loss keeps drops
+  rare in training.
+
+Sharding: expert tensors carry a leading ``E`` dim placed on ``model``
+when divisible (expert parallelism — llama4's 128 experts over 16); the
+buffer's ``E`` dim then lowers to an all-to-all, the communication
+pattern Kant's HBD-granular placement (§3.3.5) exists to serve.  With
+indivisible ``E`` (mixtral's 8) the expert weights are TP-sharded on
+``d_ff`` instead and the buffer stays batch-sharded only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain
+import math
+
+from .layers import Params, dense_init, spec
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, dtype,
+             out_scale: float = 1.0) -> Params:
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d_model, n_experts), dtype),
+        "w_gate": dense_init(k1, (n_experts, d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (n_experts, d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (n_experts, d_ff, d_model), dtype,
+                             scale=out_scale / math.sqrt(d_ff)),
+    }
+
+
+def spec_moe(d_model: int, d_ff: int, n_experts: int, dtype) -> Params:
+    return {
+        "router": spec((d_model, n_experts), dtype),
+        "w_gate": spec((n_experts, d_model, d_ff), dtype),
+        "w_up": spec((n_experts, d_model, d_ff), dtype),
+        "w_down": spec((n_experts, d_ff, d_model), dtype),
+    }
+
+
+def capacity(tokens_per_group: int, n_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    c = int(capacity_factor * tokens_per_group * top_k / n_experts)
+    return max(4, -(-c // 4) * 4)               # multiple of 4, >= 4
+
+
+def moe_ffn(p: Params, x: jnp.ndarray, *, top_k: int,
+            capacity_factor: float = 1.25, dispatch: str = "sort"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B, S, d), aux load-balance loss scalar).
+
+    ``dispatch="sort"`` (default) builds the (B, E, C, d) expert buffer
+    with an argsort-by-expert + gathers and combines with a reshape-sum —
+    entirely scatter-free.  SPMD partitions gathers on batch-sharded,
+    d-replicated operands locally, where the ``"scatter"`` formulation
+    (GShard-style ``.at[].add``) lowers to a mesh-transposing
+    collective-permute plus a full-buffer all-reduce per layer
+    (~6 s/step of the mixtral-8x7b collective term; §Perf mixtral log).
+    ``"scatter"`` is kept as the reference/baseline formulation.
+    """
+    B, S, d = x.shape
+    E = p["router"].shape[-1]
+    C = capacity(S, E, top_k, capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B, S, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)       # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Per-row position of each (token, k) assignment in its expert queue.
+    flat_expert = expert_ids.reshape(B, S * top_k)            # (B, S*k)
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # (B, S*k, E)
+    pos_in_expert = jnp.cumsum(onehot, axis=1) - onehot       # exclusive
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[..., None],
+                              axis=2)[..., 0]                 # (B, S*k)
+    keep = pos < C
+    slot = jnp.where(keep, flat_expert * C + pos, E * C)      # E*C = trash
+
+    tok_idx = jnp.repeat(jnp.arange(S), top_k)                # (S*k,)
+    if dispatch == "sort":
+        N = S * top_k
+        counts = onehot.sum(axis=1)                           # (B, E)
+        starts = jnp.cumsum(counts, axis=1) - counts          # exclusive
+        order = jnp.argsort(flat_expert, axis=1, stable=True)  # (B, N)
+        # sorted rank start[e] + c  ->  assignment id  ->  token id.
+        grid = starts[:, :, None] + jnp.arange(C)[None, None, :]
+        valid = jnp.arange(C)[None, None, :] <             jnp.minimum(counts, C)[:, :, None]                # (B, E, C)
+        assign = jnp.take_along_axis(
+            order, jnp.clip(grid, 0, N - 1).reshape(B, E * C), axis=1)
+        token = assign // top_k                               # (B, E*C)
+        gathered = jnp.take_along_axis(x, token[..., None], axis=1)
+        expert_in = gathered.reshape(B, E, C, d)             * valid[..., None].astype(x.dtype)
+    else:
+        # Row-local scatter into (B, E*C+1, d); trash absorbs overflow.
+        xa = x[:, tok_idx]                                    # (B, S*k, d)
+        row = jnp.arange(B)[:, None]
+        buf = jnp.zeros((B, E * C + 1, d), dtype=x.dtype)
+        buf = buf.at[row, slot].add(xa)
+        expert_in = buf[:, :E * C].reshape(B, E, C, d)
+    expert_in = constrain(expert_in, ("batch", "model", None, None))
+
+    # Batched expert SwiGLU — the only real FLOPs in this function.
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, p["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", expert_in, p["w_up"])
+    h = constrain(h, ("batch", "model", None, None))
+    expert_out = constrain(
+        jnp.einsum("becf,efd->becd", h, p["w_down"]),
+        ("batch", "model", None, None))
+
+    # Row-local gather back, weighted by the (renormalized) gates.
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(B, E * C, d),
+         jnp.zeros((B, 1, d), dtype=expert_out.dtype)], axis=1)
+    per_assign = jnp.take_along_axis(flat_out, slot[..., None], axis=1)
+    # Combine in x.dtype: gate_vals is f32 (softmax); multiplying the bf16
+    # expert outputs by it promotes the whole combine — and the transpose
+    # of that convert drags f32 cotangents through every dispatch
+    # scatter/gather collective in the backward (2x bytes; §Perf mixtral).
+    gates = (gate_vals.reshape(B, S * top_k)[..., None]
+             * keep[..., None].astype(jnp.float32)).astype(x.dtype)
+    per_assign = per_assign * gates
+    # tok_idx repeats each token top_k times, so the .at[].add combine is
+    # exactly a reshape-sum over k — scatter-free.
+    out = per_assign.reshape(B, S, top_k, d).sum(axis=2).astype(x.dtype)
+    out = constrain(out, ("batch", None, None))
+
+    # Switch-style auxiliary load-balance loss.
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    ce = onehot.sum(axis=(0, 1)).astype(jnp.float32) / (B * S * top_k)
+    aux = E * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,180 @@
+"""RWKV-6 "Finch" block: data-dependent decay linear attention
+[arXiv:2404.05892].
+
+Per head ``h`` with head_dim ``n`` the time-mix recurrence over state
+``S_t ∈ R^{n×n}`` is::
+
+    S_t = diag(w_t) · S_{t-1} + k_t^T v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+
+with the *data-dependent* decay ``w_t = exp(-exp(wb + W_w · x_t))`` (the
+Finch novelty vs RWKV-5's static decay) and a LoRA-style low-rank path for
+the decay projection.  Token-shift mixes each input with its predecessor.
+
+Training runs the recurrence with ``lax.scan`` over time in chunks of
+``CHUNK`` steps (keeps HLO small; the per-step math is pure VPU work).
+Decode carries ``S`` explicitly — O(1) state, which is why rwkv6 runs the
+long_500k shape natively (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import constrain
+from .layers import Params, dense_init, rmsnorm, spec
+
+DECAY_LORA = 64
+
+
+def init_rwkv_block(key, d_model: int, d_ff: int, head_dim: int,
+                    dtype, out_scale: float = 1.0) -> Params:
+    H = d_model // head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        "ln_t": jnp.ones((d_model,), dtype),
+        "ln_c": jnp.ones((d_model,), dtype),
+        # token-shift mixing coefficients per stream
+        "mu": (jnp.ones((5, d_model)) * 0.5).astype(dtype),
+        "wr": dense_init(ks[0], (d_model, d_model), dtype),
+        "wk": dense_init(ks[1], (d_model, d_model), dtype),
+        "wv": dense_init(ks[2], (d_model, d_model), dtype),
+        "wg": dense_init(ks[3], (d_model, d_model), dtype),
+        "wo": dense_init(ks[4], (d_model, d_model), dtype,
+                         scale=out_scale / math.sqrt(d_model)),
+        # data-dependent decay: base + LoRA path
+        "decay_base": jnp.zeros((H, head_dim), dtype),
+        "decay_a": dense_init(ks[5], (d_model, DECAY_LORA), dtype),
+        "decay_b": dense_init(ks[6], (DECAY_LORA, d_model), dtype),
+        "bonus_u": (jnp.ones((H, head_dim)) * 0.5).astype(dtype),
+        # channel-mix (RWKV FFN): square ReLU
+        "ck": dense_init(ks[7], (d_model, d_ff), dtype),
+        "cv": dense_init(ks[8], (d_ff, d_model), dtype,
+                         scale=out_scale / math.sqrt(d_ff)),
+        "cr": dense_init(ks[9], (d_model, d_model), dtype),
+    }
+
+
+def spec_rwkv_block(d_model: int, d_ff: int, head_dim: int, dtype) -> Params:
+    H = d_model // head_dim
+    return {
+        "ln_t": spec((d_model,), dtype),
+        "ln_c": spec((d_model,), dtype),
+        "mu": spec((5, d_model), dtype),
+        "wr": spec((d_model, d_model), dtype),
+        "wk": spec((d_model, d_model), dtype),
+        "wv": spec((d_model, d_model), dtype),
+        "wg": spec((d_model, d_model), dtype),
+        "wo": spec((d_model, d_model), dtype),
+        "decay_base": spec((H, head_dim), dtype),
+        "decay_a": spec((d_model, DECAY_LORA), dtype),
+        "decay_b": spec((DECAY_LORA, d_model), dtype),
+        "bonus_u": spec((H, head_dim), dtype),
+        "ck": spec((d_model, d_ff), dtype),
+        "cv": spec((d_ff, d_model), dtype),
+        "cr": spec((d_model, d_model), dtype),
+    }
+
+
+def rwkv_state_shape(batch: int, d_model: int, head_dim: int
+                     ) -> Tuple[int, int, int, int]:
+    H = d_model // head_dim
+    return (batch, H, head_dim, head_dim)
+
+
+def _streams(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Token-shift then project the five RWKV streams.
+
+    x: (B, T, d); x_prev: (B, T, d) (x shifted right by one).
+    """
+    B, T, d = x.shape
+    mu = p["mu"].astype(x.dtype)
+    one = jnp.ones((), x.dtype)
+    xs = [x * mu[i] + x_prev * (one - mu[i]) for i in range(5)]
+    r = constrain(xs[0] @ p["wr"], ("batch", None, "model"))
+    k = constrain(xs[1] @ p["wk"], ("batch", None, "model"))
+    v = constrain(xs[2] @ p["wv"], ("batch", None, "model"))
+    g = constrain(jax.nn.silu(xs[3] @ p["wg"]), ("batch", None, "model"))
+    dd = jnp.tanh(xs[4] @ p["decay_a"]) @ p["decay_b"]
+    H, hd = p["decay_base"].shape
+    w = jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32).reshape(-1)
+                         + dd.astype(jnp.float32)))        # (B,T,d) in (0,1)
+    shp = (B, T, H, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            g, w.reshape(shp))
+
+
+def time_mix(p: Params, x: jnp.ndarray, state: jnp.ndarray,
+             x_last: jnp.ndarray, backend: str = "scan"
+             ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full-sequence time-mix.
+
+    x: (B, T, d) normalized input; state: (B, H, n, n); x_last: (B, d)
+    the last pre-norm input of the previous segment (token shift seam).
+    Returns (out (B,T,d), new state, new x_last).
+
+    ``backend``: "scan" (pure-jnp step scan — the portable default and
+    what the CPU dry-run lowers) or "pallas"/"interpret" — the
+    VMEM-resident WKV kernel (kernels/wkv6.py), which removes the
+    per-step HBM state round-trip on TPU (§Perf rwkv6 log).
+    """
+    B, T, d = x.shape
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1]], axis=1)
+    r, k, v, g, w = _streams(p, x, x_prev)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if backend != "scan":
+        from ..kernels.ops import wkv6
+        o4, state = wkv6(r, k, v, w, u, state, backend=backend)
+        o = o4.reshape(B, T, d)
+        out = (o.astype(x.dtype) * g) @ p["wo"]
+        return out, state, x[:, -1]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                 # (B,H,hd) each
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,n,n)
+        o = jnp.einsum("bhn,bhnm->bhm", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, o
+
+    rT = r.transpose(1, 0, 2, 3).astype(jnp.float32)
+    kT = k.transpose(1, 0, 2, 3).astype(jnp.float32)
+    vT = v.transpose(1, 0, 2, 3).astype(jnp.float32)
+    wT = w.transpose(1, 0, 2, 3)
+    state, oT = jax.lax.scan(step, state.astype(jnp.float32),
+                             (rT, kT, vT, wT))
+    o = oT.transpose(1, 0, 2, 3).reshape(B, T, d)
+    out = (o.astype(x.dtype) * g) @ p["wo"]
+    return out, state, x[:, -1]
+
+
+def time_mix_decode(p: Params, x: jnp.ndarray, state: jnp.ndarray,
+                    x_last: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token time-mix.  x: (B, 1, d)."""
+    B, _, d = x.shape
+    r, k, v, g, w = _streams(p, x, x_last[:, None, :])
+    u = p["bonus_u"].astype(jnp.float32)
+    r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+    kv = k1[..., :, None] * v1[..., None, :]
+    o = jnp.einsum("bhn,bhnm->bhm", r1,
+                   state.astype(jnp.float32) + u[None, :, :, None] * kv)
+    state = w1[..., :, None] * state.astype(jnp.float32) + kv
+    out = (o.reshape(B, 1, d).astype(x.dtype) * g) @ p["wo"]
+    return out, state, x[:, -1]
+
+
+def channel_mix(p: Params, x: jnp.ndarray, x_last: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RWKV channel-mix (squared-ReLU FFN with receptance gate)."""
+    x_prev = jnp.concatenate([x_last[:, None, :], x[:, :-1]], axis=1)
+    mix = 0.5 * (x + x_prev)
+    kx = jnp.square(jax.nn.relu(mix @ p["ck"]))
+    rx = jax.nn.sigmoid(mix @ p["cr"])
+    return rx * (kx @ p["cv"]), x[:, -1]

@@ -1,0 +1,7 @@
+"""Serving substrate: prefill/decode step factories + batched engine."""
+
+from .engine import Request, ServeEngine
+from .step import make_decode_step, make_prefill_step
+
+__all__ = ["Request", "ServeEngine", "make_decode_step",
+           "make_prefill_step"]

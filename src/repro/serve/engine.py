@@ -1,0 +1,125 @@
+"""Batched serving engine (continuous-batching flavoured, CPU-scale).
+
+The engine keeps one fixed-size decode batch; requests occupy slots,
+finished slots are refilled from the queue.  This is the "inference
+service" workload kind Kant schedules with Spread/E-Spread — the
+``examples/inference_cluster.py`` demo runs several replica engines whose
+pods were placed by RSCH.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models.model import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params: PyTree, *,
+                 batch_size: int = 4, max_seq: int = 256,
+                 eos_id: Optional[int] = None) -> None:
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params
+        self.B = batch_size
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, seq_len=max_seq))
+        self._decode = jax.jit(self.model.decode_step)
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self.cache: Optional[PyTree] = None
+        self.last_token = np.zeros(batch_size, np.int32)
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Fill empty slots; (re)prefill the whole batch when admitting.
+
+        CPU-scale simplification: admission re-prefills every active
+        prompt + its generated tokens so all slots share one cache.  A
+        production engine would insert per-slot; the Kant integration
+        only needs request-level throughput semantics.
+        """
+        changed = False
+        for i in range(self.B):
+            if (self.slots[i] is None or self.slots[i].done) and self.queue:
+                self.slots[i] = self.queue.pop(0)
+                changed = True
+        if not changed or all(s is None for s in self.slots):
+            return
+        S = max((len(s.prompt) + len(s.generated))
+                for s in self.slots if s is not None)
+        toks = np.zeros((self.B, S), np.int32)
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            seq = np.concatenate([s.prompt, np.asarray(s.generated,
+                                                       np.int32)])
+            toks[i, -len(seq):] = seq          # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.family == "vlm":
+            from ..models.frontend import patch_embeds
+            batch["patch_embeds"] = patch_embeds(self.cfg, self.B)
+        if self.cfg.family == "encdec":
+            from ..models.frontend import frame_embeds
+            batch["enc_embeds"] = frame_embeds(self.cfg, self.B, S * 4)
+        logits, self.cache = self._prefill(self.params, batch)
+        self.last_token = np.asarray(jnp.argmax(logits, -1), np.int32)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit + one decode step.  Returns number of
+        active requests."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and not s.done]
+        if not active or self.cache is None:
+            return 0
+        for i in active:
+            self.slots[i].generated.append(int(self.last_token[i]))
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token))
+        self.last_token = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.steps += 1
+        for i in active:
+            s = self.slots[i]
+            if len(s.generated) >= s.max_new_tokens or \
+                    (self.eos_id is not None
+                     and s.generated[-1] == self.eos_id):
+                s.done = True
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(
+                    s is None or s.done for s in self.slots):
+                break
+            self.step()
+            for i, s in enumerate(self.slots):
+                if s is not None and s.done:
+                    finished.append(s)
+                    self.slots[i] = None
+        return finished

@@ -1,0 +1,44 @@
+"""Serving step factories.
+
+``prefill_step`` runs the prompt and emits the ring-buffer KV (or SSM)
+cache; ``decode_step`` advances one token against it.  The decode shapes
+of the dry-run (decode_32k, long_500k) lower exactly these functions —
+one new token against a ``seq_len`` (windowed) cache, never a
+``train_step``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.model import Model
+
+PyTree = Any
+
+
+def make_prefill_step(cfg: ArchConfig, seq_len: int
+                      ) -> Callable[[PyTree, Dict[str, jnp.ndarray]],
+                                    Tuple[jnp.ndarray, PyTree]]:
+    """(params, batch) -> (last-token logits, cache sized for seq_len)."""
+    model = Model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, seq_len=seq_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig
+                     ) -> Callable[[PyTree, PyTree, jnp.ndarray],
+                                   Tuple[jnp.ndarray, PyTree]]:
+    """(params, cache, token (B,)) -> (logits (B, V), new cache)."""
+    model = Model(cfg)
+
+    def decode_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+
+    return decode_step

@@ -1,0 +1,7 @@
+"""Rule-based auto-sharder (FSDP × TP × EP) for the model zoo."""
+
+from .auto import (batch_axes, batch_specs, cache_specs_sharding,
+                   param_shardings, partition_spec, ShardingRules)
+
+__all__ = ["batch_axes", "batch_specs", "cache_specs_sharding",
+           "param_shardings", "partition_spec", "ShardingRules"]

@@ -1,0 +1,201 @@
+"""Deterministic rule-based auto-sharder.
+
+Maps every parameter / input / cache leaf to a ``PartitionSpec`` over the
+production mesh (``data``, ``model``[, ``pod``]):
+
+* **FSDP** — a weight dim is sharded over ``data`` (gathered on use);
+* **TP**   — heads / d_ff / vocab dims are sharded over ``model``;
+* **EP**   — MoE expert dims go on ``model`` when divisible (expert
+  parallelism: the scatter/gather dispatch lowers to an all-to-all);
+* **batch** — activations shard batch over (``pod``, ``data``).
+
+Rules are matched by path regex and tried in priority order; any dim that
+fails the divisibility check falls back down the candidate list and
+ultimately to replication.  The table is deterministic and unit-tested
+(``tests/test_sharding.py``).
+
+Rationale for the non-obvious fallbacks (see DESIGN.md §4):
+
+* GQA caches: KV-head counts (8, 5, 2, 1) rarely divide the 16-way
+  ``model`` axis, so the KV cache falls back to sharding the *window*
+  dim — the ring-buffer ``dynamic_update_slice`` then crosses shards,
+  which XLA SPMD handles (baseline; §Perf iterates on this);
+* small KV projections (MQA kv=1): shard ``head_dim`` over ``model``
+  instead, accepting an all-reduce on the scores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (path regex, [(dim, axis), ...]) — dims are negative (counted from the
+# end) so the same rule covers stacked (leading-L) and unstacked leaves.
+PARAM_RULES: List[Tuple[str, List[Tuple[int, str]]]] = [
+    # embeddings / head
+    (r"(^|/)embed$",            [(-2, "model"), (-1, "data")]),
+    (r"(^|/)lm_head$",          [(-1, "model"), (-2, "data")]),
+    # attention (decoder, cross, encoder)
+    (r"(attn|xattn)/wq$",       [(-2, "model"), (-3, "data")]),
+    # NOTE: no head_dim fallback for K/V — contracting a model-sharded
+    # head_dim in the score einsum would force a (B,S,H,S)-sized
+    # all-reduce per KV block.  Small-KV archs replicate K/V heads.
+    (r"(attn|xattn)/w[kv]$",    [(-2, "model"), (-3, "data")]),
+    (r"(attn|xattn)/wo$",       [(-3, "model"), (-1, "data")]),
+    # dense / shared MLP
+    (r"mlp/w_(gate|up)$",       [(-1, "model"), (-2, "data")]),
+    (r"mlp/w_down$",            [(-2, "model"), (-1, "data")]),
+    # MoE — expert dim first (EP), then d_ff (TP), then FSDP
+    (r"moe/router$",            [(-1, "model"), (-2, "data")]),
+    (r"moe/w_(gate|up)$",       [(-3, "model"), (-1, "model"),
+                                 (-2, "data")]),
+    (r"moe/w_down$",            [(-3, "model"), (-2, "model"),
+                                 (-1, "data")]),
+    # rwkv6 time-mix / channel-mix (flat block: layers/wr etc.)
+    (r"layers/w[rkvg]$",        [(-1, "model"), (-2, "data")]),
+    (r"layers/wo$",             [(-2, "model"), (-1, "data")]),
+    (r"layers/ck$",             [(-1, "model"), (-2, "data")]),
+    (r"layers/cv$",             [(-2, "model"), (-1, "data")]),
+    (r"layers/cr$",             [(-1, "model"), (-2, "data")]),
+    (r"decay_[ab]$",            []),
+    # hymba SSM branch
+    (r"ssm/w_in$",              [(-1, "model"), (-2, "data")]),
+    (r"ssm/w_out$",             [(-2, "model"), (-1, "data")]),
+    (r"ssm/w_bc$",              [(-2, "data")]),
+    (r"ssm/w_dt2?$",            [(-2, "data")]),
+    # everything else (norms, mu, decay_base, bonus_u, a_log, d_skip):
+    # replicated — they are O(d_model) vectors.
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolved mesh-axis sizes + the rule table (swappable for §Perf)."""
+
+    mesh: Mesh
+    rules: Sequence[Tuple[str, List[Tuple[int, str]]]] = tuple(PARAM_RULES)
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.axis_sizes))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _apply_candidates(shape: Sequence[int], cands: List[Tuple[int, str]],
+                      sizes: Dict[str, int]) -> P:
+    spec: List[Optional[str]] = [None] * len(shape)
+    used_axes = set()
+    for dim, axis in cands:
+        if axis not in sizes or axis in used_axes:
+            continue
+        if dim < -len(shape):
+            continue
+        if spec[dim] is not None:
+            continue
+        if shape[dim] % sizes[axis] != 0 or shape[dim] < sizes[axis]:
+            continue
+        spec[dim] = axis
+        used_axes.add(axis)
+    return P(*spec)
+
+
+def partition_spec(path: str, shape: Sequence[int],
+                   rules: ShardingRules) -> P:
+    sizes = rules.axis_sizes
+    for pattern, cands in rules.rules:
+        if re.search(pattern, path):
+            return _apply_candidates(shape, cands, sizes)
+    return P()        # replicate by default (norm scales etc.)
+
+
+def _tree_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for keypath, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        yield path, leaf
+    return
+
+
+def param_shardings(params: PyTree, rules: ShardingRules) -> PyTree:
+    """NamedSharding tree matching a parameter (or spec) tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for keypath, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        spec = partition_spec(path, leaf.shape, rules)
+        out.append(NamedSharding(rules.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _batch_dim_spec(n: int, mesh: Mesh) -> Optional[Tuple[str, ...]]:
+    axes = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    # Use the largest prefix of (pod, data) that divides the batch.
+    for k in range(len(axes), 0, -1):
+        prod = int(np.prod([sizes[a] for a in axes[:k]]))
+        if n % prod == 0 and n >= prod:
+            return axes[:k]
+    return None
+
+
+def batch_specs(batch: PyTree, rules: ShardingRules) -> PyTree:
+    """Shard every batch leaf over its leading (batch) dim."""
+    mesh = rules.mesh
+
+    def one(leaf):
+        b = _batch_dim_spec(leaf.shape[0], mesh)
+        spec = [b] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_specs_sharding(cache: PyTree, rules: ShardingRules) -> PyTree:
+    """KV/SSM cache sharding.
+
+    Layer caches are stacked: (L, B, W, Kh, hd) for k/v, (L, B, ...) for
+    SSM states, plus scalars.  Batch goes over (pod, data); the KV head
+    dim over ``model`` when divisible, else the window dim, else
+    replicated.
+    """
+    mesh = rules.mesh
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    m = sizes.get("model", 1)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for keypath, leaf in flat:
+        path = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in keypath)
+        shp = leaf.shape
+        if len(shp) == 0:                      # the step counter
+            out.append(NamedSharding(mesh, P()))
+            continue
+        spec: List[Any] = [None] * len(shp)
+        # Leading dim is L (stacked layers) for layer caches / memory.
+        bdim = 1 if len(shp) >= 2 else 0
+        spec[bdim] = _batch_dim_spec(shp[bdim], mesh)
+        if re.search(r"(^|/)(k|v|mk|mv)$", path) and len(shp) == 5:
+            L, B, W, Kh, hd = shp
+            if Kh % m == 0 and Kh >= m:
+                spec[3] = "model"
+            elif W % m == 0 and W >= m:
+                spec[2] = "model"
+        elif re.search(r"/(ssm|state)$", path) and len(shp) >= 4:
+            # (L,B,d,N) or (L,B,H,n,n): shard the channel/head dim.
+            if shp[2] % m == 0 and shp[2] >= m:
+                spec[2] = "model"
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,97 @@
+"""Activation-sharding hints for the model code.
+
+``jax.jit`` in/out shardings constrain only the step boundary; inside a
+scanned layer body XLA's propagation is free to pick batch-replicated,
+weight-stationary strategies (it does, catastrophically — see DESIGN.md
+§4).  Real frameworks pin activations with ``with_sharding_constraint``;
+this module provides that without coupling the model code to a mesh:
+
+* launchers/dry-run install an :class:`ActivationSharding` via
+  ``use_activation_sharding`` around tracing;
+* model code calls :func:`constrain` with a *logical* spec such as
+  ``("batch", None, "model", None)``;
+* with no context installed (CPU unit tests), ``constrain`` is a no-op;
+* axes that do not divide the corresponding dim fall back to ``None``
+  (e.g. 25 hymba heads on a 16-way ``model`` axis).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+Logical = Union[None, str, Tuple[str, ...]]
+
+
+class ActivationSharding:
+    def __init__(self, mesh: Mesh, seq_shard: bool = False) -> None:
+        self.mesh = mesh
+        self.sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        batch = tuple(a for a in ("pod", "data") if a in self.sizes)
+        # "seq" is the Megatron-style sequence-parallel hint: layer-boundary
+        # activations (and their remat-saved residuals) shard S over
+        # ``model`` when enabled, else the hint resolves to replicated.
+        self.logical = {"batch": batch, "model": ("model",),
+                        "seq": ("model",) if seq_shard else ()}
+
+    def resolve(self, dim: int, logical: Logical) -> Optional[Tuple[str, ...]]:
+        if logical is None:
+            return None
+        axes = self.logical.get(logical, (logical,)) \
+            if isinstance(logical, str) else logical
+        if not axes:
+            return None
+        # Longest prefix of the axis tuple that divides the dim.
+        for k in range(len(axes), 0, -1):
+            prod = int(np.prod([self.sizes[a] for a in axes[:k]]))
+            if dim % prod == 0 and dim >= prod:
+                return tuple(axes[:k])
+        return None
+
+
+@contextlib.contextmanager
+def use_activation_sharding(mesh: Optional[Mesh], seq_shard: bool = False):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (ActivationSharding(mesh, seq_shard=seq_shard)
+                  if mesh is not None else None)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current() -> Optional[ActivationSharding]:
+    return getattr(_STATE, "ctx", None)
+
+
+def axis_size(name: str) -> int:
+    """Mesh size of a logical axis under the installed context (1 if no
+    context) — lets model code pick between equivalent layouts, e.g.
+    head-sharded vs q-sequence-sharded attention chunks."""
+    ctx = current()
+    if ctx is None:
+        return 1
+    axes = ctx.logical.get(name, (name,))
+    size = 1
+    for a in axes:
+        size *= ctx.sizes.get(a, 1)
+    return size
+
+
+def constrain(x: jax.Array, spec: Sequence[Logical]) -> jax.Array:
+    """Pin ``x`` to a logical sharding if a context is installed."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if len(spec) != x.ndim:
+        raise ValueError(f"spec rank {len(spec)} != array rank {x.ndim}")
+    parts = [ctx.resolve(int(d), s) for d, s in zip(x.shape, spec)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*parts)))

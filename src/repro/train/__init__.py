@@ -1,0 +1,8 @@
+"""Training substrate: loss, AdamW, train-step factory."""
+
+from .loss import cross_entropy_loss
+from .optim import AdamWConfig, adamw_init, adamw_update, opt_specs
+from .step import TrainState, make_train_step
+
+__all__ = ["cross_entropy_loss", "AdamWConfig", "adamw_init",
+           "adamw_update", "opt_specs", "TrainState", "make_train_step"]

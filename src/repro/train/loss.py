@@ -1,0 +1,21 @@
+"""Token-level cross-entropy with numerically-stable log-softmax."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       ignore_id: int = -1) -> jnp.ndarray:
+    """Mean CE over non-ignored positions.
+
+    logits: (B, S, V) (any float dtype); labels: (B, S) int32.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,114 @@
+"""Train-step factory: loss + grad + AdamW update, pjit-ready.
+
+``make_train_step`` returns a pure function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` suitable
+for ``jax.jit`` with explicit in/out shardings (see launch/dryrun.py and
+launch/train.py).  Activation checkpointing (remat) over the layer scan
+is the default for training — the paper-faithful baseline for the
+roofline's memory term.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.model import Model
+from .loss import cross_entropy_loss
+from .optim import AdamWConfig, adamw_update
+
+PyTree = Any
+AUX_WEIGHT = 0.01     # MoE load-balance loss weight
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    *, remat: bool = True, microbatches: int = 1,
+                    grad_shardings: PyTree = None
+                    ) -> Callable[[PyTree, PyTree, Dict[str, jnp.ndarray]],
+                                  Tuple[PyTree, PyTree, Dict[str, Any]]]:
+    """``microbatches > 1`` splits the per-device batch and accumulates
+    gradients with a ``lax.scan`` (gradient accumulation).  Activation
+    live range — in particular the (L, B_ubatch, S, d) saved-residual
+    stack under remat — shrinks by the microbatch factor, which is what
+    lets the train_4k shapes fit v5e HBM (EXPERIMENTS.md §Perf).
+
+    ``grad_shardings`` (a NamedSharding tree matching params) pins the
+    f32 accumulator inside the scan: without it SPMD keeps the embed /
+    lm_head gradient carries fully replicated — 2 x 1.6 GB f32 per device
+    on mistral-large plus same-sized transients (§Perf iteration log)."""
+    model = Model(cfg)
+
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, remat=remat)
+        loss = cross_entropy_loss(logits, batch["labels"])
+        return loss + AUX_WEIGHT * aux, (loss, aux)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def split_ubatches(batch):
+        def split(x):
+            b = x.shape[0]
+            if b % microbatches:
+                raise ValueError(
+                    f"batch {b} not divisible by {microbatches} ubatches")
+            return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+        return jax.tree.map(split, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (total, (loss, aux)), grads = grads_of(params, batch)
+        else:
+            ubatches = split_ubatches(batch)
+
+            def pin(tree):
+                if grad_shardings is None:
+                    return tree
+                return jax.tree.map(jax.lax.with_sharding_constraint,
+                                    tree, grad_shardings)
+
+            def body(acc, ubatch):
+                (t, (l, a)), g = grads_of(params, ubatch)
+                acc_g, acc_m = acc
+                acc_g = pin(jax.tree.map(jnp.add, acc_g, pin(g)))
+                return (acc_g, acc_m + jnp.stack([t, l, a])), None
+
+            zero_g = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, sums), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((3,), jnp.float32)), ubatches)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            total, loss, aux = sums[0] * inv, sums[1] * inv, sums[2] * inv
+        params, opt_state, gnorm = adamw_update(opt_cfg, grads, opt_state,
+                                                params)
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total,
+                   "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class TrainState:
+    """Thin mutable wrapper used by the CPU example driver."""
+
+    def __init__(self, cfg: ArchConfig, key,
+                 opt_cfg: AdamWConfig = AdamWConfig(),
+                 dtype=jnp.float32, remat: bool = False) -> None:
+        from .optim import adamw_init
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = self.model.init(key, dtype=dtype)
+        self.opt_state = adamw_init(self.params)
+        self.step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat=remat))
+        self.history = []
+
+    def step(self, batch) -> Dict[str, float]:
+        self.params, self.opt_state, metrics = self.step_fn(
+            self.params, self.opt_state, batch)
+        out = {k: float(v) for k, v in metrics.items()}
+        self.history.append(out)
+        return out

@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see the single
+real CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterState, QSCH, QSCHConfig, QueuePolicy,
+                        QuotaManager, QuotaMode, RSCH, RSCHConfig,
+                        small_topology)
+
+
+@pytest.fixture
+def topo():
+    return small_topology(n_nodes=16, gpus_per_node=8, nodes_per_leaf=4)
+
+
+@pytest.fixture
+def state(topo):
+    return ClusterState.create(topo)
+
+
+def make_qsch(topo, state, *, policy=QueuePolicy.BACKFILL,
+              quota=None, mode=QuotaMode.ISOLATED,
+              incremental=True, rsch_config=None, **cfg_kw):
+    qm = QuotaManager(quota or {"t0": {0: 1024}}, mode=mode)
+    rsch = RSCH(topo, rsch_config or RSCHConfig())
+    cfg = QSCHConfig(policy=policy, **cfg_kw)
+    return QSCH(qm, rsch, cfg, incremental_snapshots=incremental)

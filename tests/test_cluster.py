@@ -1,0 +1,87 @@
+"""ClusterState: allocation ledger, pools, fragmentation (§3.4.1, §4.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterState, Job, Placement, PodPlacement
+from repro.core.topology import small_topology
+
+
+def _job(uid=0, n_pods=1, gpus=4, gpu_type=0, tenant="t0"):
+    return Job(uid=uid, tenant=tenant, gpu_type=gpu_type, n_pods=n_pods,
+               gpus_per_pod=gpus)
+
+
+def test_allocate_release_roundtrip(state):
+    job = _job(gpus=4)
+    p = Placement(pods=[PodPlacement(node=0, gpu_indices=(0, 1, 2, 3))])
+    state.allocate(job, p)
+    assert state.free_gpus()[0] == 4
+    assert state.total_allocated() == 4
+    state.check_invariants()
+    state.release(job.uid)
+    assert state.total_allocated() == 0
+    state.check_invariants()
+
+
+def test_double_allocation_rejected(state):
+    job = _job(gpus=2)
+    p = Placement(pods=[PodPlacement(node=1, gpu_indices=(0, 1))])
+    state.allocate(job, p)
+    job2 = _job(uid=1, gpus=2)
+    with pytest.raises(ValueError):
+        state.allocate(job2, Placement(
+            pods=[PodPlacement(node=1, gpu_indices=(1, 2))]))
+    state.check_invariants()
+
+
+def test_gang_all_or_nothing(state):
+    """A multi-pod placement with one invalid pod must not mutate."""
+    job = _job(n_pods=2, gpus=8)
+    bad = Placement(pods=[PodPlacement(node=0, gpu_indices=tuple(range(8))),
+                          PodPlacement(node=99, gpu_indices=tuple(range(8)))])
+    with pytest.raises(ValueError):
+        state.allocate(job, bad)
+    assert state.total_allocated() == 0
+
+
+def test_unhealthy_gpu_excluded(state):
+    state.set_gpu_health(2, 0, False)
+    assert state.free_gpus()[2] == 7
+    assert state.total_allocatable() == 16 * 8 - 1
+    job = _job(gpus=8)
+    with pytest.raises(ValueError):
+        state.allocate(job, Placement(
+            pods=[PodPlacement(node=2, gpu_indices=tuple(range(8)))]))
+
+
+def test_node_health_gates_everything(state):
+    state.set_node_health(3, False)
+    assert state.free_gpus()[3] == 0
+    assert not state.pool_mask(0)[3]
+
+
+def test_fragmentation_definition(state):
+    """§4.3: fragmented = neither fully idle nor fully occupied."""
+    assert state.fragmented_nodes().sum() == 0
+    state.allocate(_job(uid=1, gpus=3), Placement(
+        pods=[PodPlacement(node=0, gpu_indices=(0, 1, 2))]))
+    assert state.fragmented_nodes().sum() == 1
+    state.allocate(_job(uid=2, gpus=5), Placement(
+        pods=[PodPlacement(node=0, gpu_indices=(3, 4, 5, 6, 7))]))
+    assert state.fragmented_nodes().sum() == 0     # now fully occupied
+
+
+def test_node_pools(topo):
+    gpu_type = np.array([0] * 8 + [1] * 8, dtype=np.int32)
+    st = ClusterState.create(topo, gpu_type=gpu_type)
+    assert st.pool_free(0) == 64
+    assert st.pool_free(1) == 64
+    assert st.pool_mask(0).sum() == 8
+
+
+def test_dirty_node_tracking(state):
+    state.dirty_nodes.clear()
+    state.allocate(_job(uid=5, gpus=2), Placement(
+        pods=[PodPlacement(node=7, gpu_indices=(0, 1))]))
+    assert state.dirty_nodes == {7}

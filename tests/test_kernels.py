@@ -1,0 +1,147 @@
+"""Node-score kernel: numpy == jnp oracle == Pallas(interpret) across a
+hypothesis sweep of shapes/dtypes/weights."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scoring import (BINPACK, E_BINPACK, E_SPREAD, NEG_INF,
+                                SPREAD, ScoreWeights, node_scores_np)
+from repro.kernels.ops import best_node, node_scores
+
+
+def _table(rng, n, g=8):
+    free = rng.integers(0, g + 1, size=n).astype(np.int32)
+    used = (g - free).astype(np.int32)
+    mask = rng.random(n) < 0.8
+    group_load = rng.random(n).astype(np.float32)
+    topo_pref = rng.random(n).astype(np.float32)
+    return free, used, mask, group_load, topo_pref
+
+
+STRATEGIES = [BINPACK, E_BINPACK, SPREAD, E_SPREAD,
+              ScoreWeights(used=0.3, fit=-0.2, group=1.1, topo=-0.7)]
+
+
+@given(n=st.integers(1, 3000), seed=st.integers(0, 99),
+       strat=st.sampled_from(STRATEGIES), request=st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_ref_matches_numpy(n, seed, strat, request):
+    rng = np.random.default_rng(seed)
+    free, used, mask, gl, tp = _table(rng, n)
+    want = node_scores_np(free, used, mask, gl, tp, request, 8, strat)
+    got = node_scores(free, used, mask, gl, tp, request=request,
+                      gpus_per_node=8, weights=strat, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1000, 8192, 8193])
+@pytest.mark.parametrize("strat", [E_BINPACK, E_SPREAD])
+def test_pallas_interpret_matches_ref(n, strat):
+    rng = np.random.default_rng(n)
+    free, used, mask, gl, tp = _table(rng, n)
+    ref = node_scores(free, used, mask, gl, tp, request=4,
+                      gpus_per_node=8, weights=strat, backend="ref")
+    pal = node_scores(free, used, mask, gl, tp, request=4,
+                      gpus_per_node=8, weights=strat, backend="interpret")
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-6)
+
+
+def test_padding_rows_never_win():
+    """Padding must carry -inf so argmax cannot select a phantom node."""
+    n = 130                                  # forces padding to 8192
+    free = np.full(n, 8, np.int32)
+    used = np.zeros(n, np.int32)
+    mask = np.zeros(n, bool)
+    mask[17] = True
+    gl = np.zeros(n, np.float32)
+    tp = np.zeros(n, np.float32)
+    idx = best_node(free, used, mask, gl, tp, request=4, gpus_per_node=8,
+                    weights=E_BINPACK, backend="interpret")
+    assert idx == 17
+
+
+def test_no_valid_node_returns_minus_one():
+    free = np.zeros(64, np.int32)
+    used = np.full(64, 8, np.int32)
+    mask = np.ones(64, bool)
+    z = np.zeros(64, np.float32)
+    idx = best_node(free, used, mask, z, z, request=1, gpus_per_node=8,
+                    weights=BINPACK, backend="ref")
+    assert idx == -1
+
+
+def test_scheduler_scoring_agrees_with_kernel(topo, state):
+    """RSCH's numpy scoring pass == the kernel on real cluster state."""
+    from repro.core.snapshot import FullSnapshotter
+    snap = FullSnapshotter().take(state)
+    free = snap.free_gpus
+    used = snap.used_gpus
+    mask = snap.node_healthy
+    gl = np.zeros(topo.n_nodes, np.float32)
+    tp = np.zeros(topo.n_nodes, np.float32)
+    want = node_scores_np(free, used, mask, gl, tp, 4, 8, E_BINPACK)
+    got = node_scores(free, used, mask, gl, tp, request=4,
+                      gpus_per_node=8, weights=E_BINPACK,
+                      backend="interpret")
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# wkv6: RWKV-6 WKV recurrence kernel (kernels/wkv6.py)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,n,tb", [
+    (1, 16, 1, 8, 8),
+    (2, 32, 3, 8, 16),
+    (2, 64, 2, 16, 64),     # tb == T: single time block
+    (3, 48, 5, 4, 16),      # odd head count, tiny head dim
+])
+def test_wkv6_kernel_matches_ref(B, T, H, n, tb):
+    from repro.kernels.ops import wkv6
+    ks = jax.random.split(jax.random.PRNGKey(B * T + H), 6)
+    r, k, v = (jax.random.normal(ki, (B, T, H, n)) * 0.5 for ki in ks[:3])
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, n)))
+    u = jax.random.normal(ks[4], (H, n)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, n, n)) * 0.1
+    o_ref, sT_ref = wkv6(r, k, v, w, u, s0, backend="ref")
+    o_pl, sT_pl = wkv6(r, k, v, w, u, s0, backend="interpret", tb=tb)
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sT_pl), np.asarray(sT_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wkv6_kernel_dtypes(dtype):
+    from repro.kernels.ops import wkv6
+    B, T, H, n = 2, 16, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    r, k, v = ((jax.random.normal(ki, (B, T, H, n)) * 0.5).astype(dtype)
+               for ki in ks[:3])
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, n))).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, n)) * 0.5).astype(dtype)
+    s0 = (jax.random.normal(ks[5], (B, H, n, n)) * 0.1).astype(jnp.float32)
+    o_ref, sT_ref = wkv6(r, k, v, w, u, s0, backend="ref")
+    o_pl, sT_pl = wkv6(r, k, v, w, u, s0, backend="interpret", tb=8)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_time_mix_kernel_backend_matches_scan():
+    """rwkv6.time_mix(backend='interpret') == the step-scan layer path."""
+    from repro.models import rwkv6 as rw
+    d, hd, T, B = 32, 8, 24, 2
+    p = rw.init_rwkv_block(jax.random.PRNGKey(0), d, 64, hd, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, d)) * 0.5
+    st0 = jnp.zeros(rw.rwkv_state_shape(B, d, hd), jnp.float32)
+    xl = jnp.zeros((B, d))
+    o_scan, s_scan, _ = rw.time_mix(p, x, st0, xl, backend="scan")
+    o_ker, s_ker, _ = rw.time_mix(p, x, st0, xl, backend="interpret")
+    np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_scan),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(s_ker), np.asarray(s_scan),
+                               atol=2e-5, rtol=2e-5)

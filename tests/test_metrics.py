@@ -1,0 +1,87 @@
+"""Metrics: GAR, SOR, GFR, JWTD, JTTED definitions (§4)."""
+
+import numpy as np
+
+from repro.core import (ClusterState, Job, JobKind, MetricsRecorder,
+                        Placement, PodPlacement, size_bucket)
+from repro.core.topology import small_topology
+
+
+def _alloc(state, uid, node, gpus):
+    job = Job(uid=uid, tenant="t", gpu_type=0, n_pods=1,
+              gpus_per_pod=len(gpus), kind=JobKind.TRAIN)
+    job.placement = Placement(pods=[PodPlacement(node=node,
+                                                 gpu_indices=tuple(gpus))])
+    state.allocate(job, job.placement)
+    return job
+
+
+def test_gar_gfr_sample():
+    topo = small_topology(n_nodes=4, gpus_per_node=4)
+    state = ClusterState.create(topo)
+    rec = MetricsRecorder(topo)
+    s = rec.sample(0.0, state)
+    assert s.gar == 0.0 and s.gfr == 0.0
+    _alloc(state, 1, 0, [0, 1, 2, 3])      # full node -> not fragmented
+    _alloc(state, 2, 1, [0, 1])            # partial -> fragmented
+    s = rec.sample(10.0, state)
+    assert s.gar == 6 / 16
+    assert s.gfr == 1 / 4
+
+
+def test_sor_integrates_allocation_over_time():
+    """§4.2: SOR = GPU-seconds allocated / GPU-seconds capacity."""
+    topo = small_topology(n_nodes=2, gpus_per_node=4)
+    state = ClusterState.create(topo)
+    rec = MetricsRecorder(topo)
+    rec.sample(0.0, state)                 # alloc 0 for [0, 100)
+    _alloc(state, 1, 0, [0, 1, 2, 3])
+    rec.sample(100.0, state)               # alloc 4 for [100, 200)
+    rec.sample(200.0, state)
+    assert abs(rec.sor() - (4 * 100) / (8 * 200)) < 1e-9
+
+
+def test_jwtd_buckets():
+    assert size_bucket(1) == "<=8"
+    assert size_bucket(64) == "9-64"
+    assert size_bucket(256) == "65-256"
+    assert size_bucket(2048) == "1025-2048"
+    jobs = []
+    for uid, (gpus, wait) in enumerate([(4, 10.0), (4, 30.0), (128, 100.0)]):
+        j = Job(uid=uid, tenant="t", gpu_type=0, n_pods=1,
+                gpus_per_pod=gpus, submit_time=0.0)
+        j.start_time = wait
+        jobs.append(j)
+    rec = MetricsRecorder(small_topology())
+    jw = rec.jwtd(jobs)
+    assert jw["<=8"] == 20.0
+    assert jw["65-256"] == 100.0
+
+
+def test_jtted_deviation_ratios():
+    topo = small_topology(n_nodes=16, gpus_per_node=8, nodes_per_leaf=4)
+    rec = MetricsRecorder(topo)
+    # 16 GPUs optimally need 2 nodes / 1 group; place on 2 nodes in 2
+    # different groups -> node_dev 1.0, group_dev 2.0
+    job = Job(uid=1, tenant="t", gpu_type=0, n_pods=2, gpus_per_pod=8,
+              kind=JobKind.TRAIN)
+    job.placement = Placement(pods=[
+        PodPlacement(node=0, gpu_indices=tuple(range(8))),
+        PodPlacement(node=4, gpu_indices=tuple(range(8)))])
+    rec.on_job_placed(job)
+    entry = rec.jtted[0]
+    assert entry.node_dev == 1.0
+    assert entry.group_dev == 2.0
+    by_bucket = rec.jtted_by_bucket()
+    assert by_bucket["9-64"] == (1.0, 2.0)
+
+
+def test_inference_jobs_excluded_from_jtted():
+    topo = small_topology()
+    rec = MetricsRecorder(topo)
+    job = Job(uid=1, tenant="t", gpu_type=0, n_pods=1, gpus_per_pod=2,
+              kind=JobKind.INFER, gang=False)
+    job.placement = Placement(pods=[PodPlacement(node=0,
+                                                 gpu_indices=(0, 1))])
+    rec.on_job_placed(job)
+    assert rec.jtted == []

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on system-wide invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterState, QSCH, QSCHConfig, QueuePolicy,
+                        Job, JobKind, QuotaManager, QuotaMode, RSCH,
+                        RSCHConfig)
+from repro.core.topology import small_topology
+
+
+def _build(policy, n_nodes=12):
+    topo = small_topology(n_nodes=n_nodes, gpus_per_node=8,
+                          nodes_per_leaf=4)
+    state = ClusterState.create(topo)
+    qm = QuotaManager({"a": {0: 48}, "b": {0: 48}}, mode=QuotaMode.SHARED)
+    qsch = QSCH(qm, RSCH(topo), QSCHConfig(policy=policy,
+                                           backfill_head_timeout=60.0))
+    return topo, state, qsch
+
+
+@st.composite
+def job_stream(draw):
+    n = draw(st.integers(1, 25))
+    jobs = []
+    t = 0.0
+    for i in range(n):
+        t += draw(st.floats(0.0, 120.0))
+        gpus = draw(st.sampled_from([1, 2, 4, 8, 16, 32, 64]))
+        n_pods, per_pod = (1, gpus) if gpus <= 8 else (gpus // 8, 8)
+        jobs.append(Job(
+            uid=i, tenant=draw(st.sampled_from(["a", "b"])), gpu_type=0,
+            n_pods=n_pods, gpus_per_pod=per_pod,
+            priority=draw(st.sampled_from([10, 50, 100])),
+            submit_time=t,
+            duration=draw(st.floats(60.0, 4000.0))))
+    return jobs
+
+
+@given(jobs=job_stream(),
+       policy=st.sampled_from(list(QueuePolicy)))
+@settings(max_examples=20, deadline=None)
+def test_invariants_hold_through_any_schedule(jobs, policy):
+    """Whatever the trace and policy: no double allocation, quota ledger
+    consistent, GAR bounded, released state clean."""
+    topo, state, qsch = _build(policy)
+    now = 0.0
+    for step in range(12):
+        now += 45.0
+        for j in jobs:
+            if j.submit_time <= now and j.state.value == "pending" \
+                    and j.uid not in {x.uid for q in qsch.queues.values()
+                                      for x in q} \
+                    and j.uid not in qsch.running:
+                qsch.submit(j)
+        qsch.cycle(state, now)
+        state.check_invariants()
+        # quota ledger matches running jobs exactly
+        used = {}
+        for j in qsch.running.values():
+            used[j.tenant] = used.get(j.tenant, 0) + j.n_gpus
+        for tenant in ("a", "b"):
+            assert qsch.quota.tenant_used(tenant, 0) == \
+                used.get(tenant, 0)
+        # allocation never exceeds capacity
+        assert 0 <= state.total_allocated() <= state.total_allocatable()
+        # complete some jobs
+        for j in list(qsch.running.values()):
+            if (j.start_time or 0) + j.duration <= now:
+                qsch.on_complete(j, state, now)
+    # drain everything still running
+    for j in list(qsch.running.values()):
+        qsch.on_complete(j, state, now + 1e6)
+    assert state.total_allocated() == 0
+    assert qsch.quota.total_used(0) == 0
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_gang_placement_never_partial(seed):
+    """RSCH either places every pod of a gang job or none."""
+    from repro.core.snapshot import FullSnapshotter
+    topo, state, qsch = _build(QueuePolicy.BACKFILL)
+    rng = np.random.default_rng(seed)
+    rsch = RSCH(topo)
+    # randomly pre-occupy
+    for n in range(topo.n_nodes):
+        k = int(rng.integers(0, 9))
+        if k:
+            state.gpu_busy[n, :k] = True
+    snap = FullSnapshotter().take(state)
+    n_pods = int(rng.integers(1, 14))
+    job = Job(uid=0, tenant="a", gpu_type=0, n_pods=n_pods,
+              gpus_per_pod=8, kind=JobKind.TRAIN)
+    res = rsch.schedule(job, snap)
+    if res.placement is not None:
+        assert len(res.placement.pods) == n_pods
+        # no pod overlaps an occupied device
+        for pod in res.placement.pods:
+            assert not state.gpu_busy[pod.node,
+                                      list(pod.gpu_indices)].any()
+    # state untouched either way (schedule is pure)
+    assert state.allocations == {}
+
+
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_quota_ledger_charge_refund_inverse(data):
+    tenants = {"a": {0: 100}, "b": {0: 50}}
+    qm = QuotaManager(tenants, mode=QuotaMode.SHARED)
+    charged = []
+    for i in range(data.draw(st.integers(1, 15))):
+        gpus = data.draw(st.integers(1, 40))
+        j = Job(uid=i, tenant=data.draw(st.sampled_from(["a", "b"])),
+                gpu_type=0, n_pods=1, gpus_per_pod=gpus)
+        if qm.can_admit(j):
+            qm.charge(j)
+            charged.append(j)
+        elif charged and data.draw(st.booleans()):
+            qm.refund(charged.pop())
+    for j in charged:
+        qm.refund(j)
+    assert qm.total_used(0) == 0
+    assert not qm.borrows

@@ -1,0 +1,129 @@
+"""QSCH: queueing policies, admission, preemption, requeue (§3.2)."""
+
+import pytest
+
+from repro.core import (Job, JobKind, JobState, QueuePolicy, QuotaMode,
+                        PRIO_HIGH, PRIO_LOW)
+from conftest import make_qsch
+
+
+def _job(uid, gpus=8, n_pods=1, prio=50, t=0.0, tenant="t0", dur=3600.0):
+    return Job(uid=uid, tenant=tenant, gpu_type=0, n_pods=n_pods,
+               gpus_per_pod=gpus, priority=prio, submit_time=t,
+               duration=dur)
+
+
+def fill_cluster(qsch, state, now=0.0, uid0=100):
+    """Occupy every node with 16 single-node 8-GPU jobs."""
+    for i in range(16):
+        qsch.submit(_job(uid0 + i, gpus=8, t=now))
+    res = qsch.cycle(state, now)
+    assert len(res.scheduled) == 16
+    return res
+
+
+def test_strict_fifo_head_blocks_queue(topo, state):
+    qsch = make_qsch(topo, state, policy=QueuePolicy.STRICT_FIFO)
+    fill_cluster(qsch, state)
+    qsch.submit(_job(1, n_pods=4, gpus=8, t=10.0))   # cannot fit
+    qsch.submit(_job(2, gpus=1, t=11.0))             # could fit, but FIFO
+    res = qsch.cycle(state, 30.0)
+    assert res.scheduled == []
+    assert res.blocked_head is not None and res.blocked_head.uid == 1
+
+
+def test_best_effort_bypasses_head(topo, state):
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BEST_EFFORT_FIFO,
+                     priority_preemption=False)
+    for i in range(15):                      # leave one node free
+        qsch.submit(_job(100 + i, gpus=8))
+    qsch.cycle(state, 0.0)
+    qsch.submit(_job(1, n_pods=4, gpus=8, t=10.0))   # blocked head
+    qsch.submit(_job(2, gpus=8, t=11.0))             # fits the free node
+    res = qsch.cycle(state, 30.0)
+    assert [j.uid for j in res.scheduled] == [2]
+
+
+def test_backfill_schedules_small_and_preempts_on_timeout(topo, state):
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BACKFILL,
+                     backfill_head_timeout=100.0)
+    for i in range(15):
+        qsch.submit(_job(100 + i, gpus=8))
+    qsch.cycle(state, 0.0)
+    qsch.submit(_job(1, n_pods=2, gpus=8, t=10.0))   # head needs 2 nodes
+    qsch.submit(_job(2, gpus=8, t=11.0))             # backfill fodder
+    res = qsch.cycle(state, 20.0)
+    assert [j.uid for j in res.scheduled] == [2]
+    assert res.scheduled[0].backfilled
+    # before timeout: no preemption
+    res = qsch.cycle(state, 60.0)
+    assert res.preempted == []
+    # one long-running job ends -> a node frees
+    done = next(j for j in qsch.running.values() if j.uid == 100)
+    qsch.on_complete(done, state, 110.0)
+    # after timeout: the head preempts the backfilled job to get node 2
+    res = qsch.cycle(state, 130.0)
+    assert any(j.uid == 2 for j in res.preempted)
+    assert any(j.uid == 1 for j in res.scheduled)
+    # preempted job was requeued (§3.2.4)
+    j2 = next(j for j in qsch.pending_jobs() if j.uid == 2)
+    assert j2.requeue_count == 1 and j2.state is JobState.PENDING
+
+
+def test_priority_preemption(topo, state):
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BACKFILL)
+    for i in range(16):
+        qsch.submit(_job(100 + i, gpus=8, prio=PRIO_LOW))
+    qsch.cycle(state, 0.0)
+    qsch.submit(_job(1, gpus=8, prio=PRIO_HIGH, t=10.0))
+    res = qsch.cycle(state, 30.0)
+    assert any(j.uid == 1 for j in res.scheduled)
+    assert len(res.preempted) >= 1
+
+
+def test_conservative_preemption_no_thrash(topo, state):
+    """Preemption must not fire when it provably cannot help."""
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BACKFILL)
+    for i in range(16):
+        qsch.submit(_job(100 + i, gpus=8, prio=PRIO_LOW))
+    qsch.cycle(state, 0.0)
+    # 17 whole nodes can never fit in a 16-node cluster
+    qsch.submit(_job(1, n_pods=17, gpus=8, prio=PRIO_HIGH, t=10.0))
+    res = qsch.cycle(state, 30.0)
+    assert res.preempted == []
+
+
+def test_static_quota_gates_global_queue(topo, state):
+    qsch = make_qsch(topo, state, quota={"t0": {0: 8}})
+    qsch.submit(_job(1, gpus=8))
+    qsch.submit(_job(2, gpus=8))           # over quota, stays in queue
+    res = qsch.cycle(state, 0.0)
+    assert [j.uid for j in res.scheduled] == [1]
+    assert qsch.queue_depth() == 1
+    qsch.on_complete(qsch.running[1], state, 100.0)
+    res = qsch.cycle(state, 130.0)
+    assert [j.uid for j in res.scheduled] == [2]
+
+
+def test_quota_reclamation_preemption(topo, state):
+    qsch = make_qsch(topo, state, quota={"a": {0: 64}, "b": {0: 64}},
+                     mode=QuotaMode.SHARED)
+    # tenant a borrows the whole cluster
+    for i in range(16):
+        qsch.submit(_job(100 + i, gpus=8, tenant="a"))
+    qsch.cycle(state, 0.0)
+    # owner b wants its quota back
+    qsch.submit(_job(1, gpus=8, tenant="b", t=10.0))
+    res = qsch.cycle(state, 30.0)
+    assert any(j.uid == 1 for j in res.scheduled)
+    assert len(res.preempted) >= 1
+    assert all(j.tenant == "a" for j in res.preempted)
+
+
+def test_ordering_priority_time_size(topo, state):
+    qsch = make_qsch(topo, state)
+    qsch.submit(_job(1, gpus=8, prio=10, t=0.0))
+    qsch.submit(_job(2, gpus=4, prio=50, t=5.0))
+    qsch.submit(_job(3, gpus=2, prio=50, t=5.0))
+    order = [j.uid for j in qsch.pending_jobs()]
+    assert order == [3, 2, 1]      # prio desc, then size asc tiebreak

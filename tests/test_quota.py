@@ -1,0 +1,67 @@
+"""Quota manager: static admission, shared/isolated, reclamation (§3.2.1)."""
+
+import pytest
+
+from repro.core import Job, QuotaManager, QuotaMode
+
+
+def _job(uid=0, tenant="a", gpus=8, gpu_type=0):
+    return Job(uid=uid, tenant=tenant, gpu_type=gpu_type, n_pods=1,
+               gpus_per_pod=gpus)
+
+
+def test_isolated_mode_blocks_over_quota():
+    qm = QuotaManager({"a": {0: 8}, "b": {0: 8}}, mode=QuotaMode.ISOLATED)
+    assert qm.can_admit(_job(gpus=8))
+    assert not qm.can_admit(_job(gpus=9))
+
+
+def test_shared_mode_borrows():
+    qm = QuotaManager({"a": {0: 8}, "b": {0: 8}}, mode=QuotaMode.SHARED)
+    j = _job(gpus=12)
+    assert qm.can_admit(j)
+    qm.charge(j)
+    assert j.borrowed_quota == 4
+    assert qm.total_used(0) == 12
+    # b stays statically admissible within its OWN quota (it reclaims
+    # the loan via preemption later, §3.2.3) ...
+    assert qm.can_admit(_job(uid=1, tenant="b", gpus=8))
+    # ... but a cannot borrow beyond the pool
+    assert not qm.can_admit(_job(uid=2, tenant="a", gpus=8))
+
+
+def test_refund_restores(quota_pair=None):
+    qm = QuotaManager({"a": {0: 8}, "b": {0: 8}}, mode=QuotaMode.SHARED)
+    j = _job(gpus=12)
+    qm.charge(j)
+    qm.refund(j)
+    assert qm.total_used(0) == 0
+    assert j.borrowed_quota == 0
+    assert not qm.borrows
+
+
+def test_per_gpu_type_quota():
+    qm = QuotaManager({"a": {0: 8, 1: 2}})
+    assert qm.can_admit(_job(gpus=8, gpu_type=0))
+    assert not qm.can_admit(_job(gpus=4, gpu_type=1))
+    assert qm.can_admit(_job(gpus=2, gpu_type=1))
+
+
+def test_reclaim_candidates_orders_borrowers():
+    qm = QuotaManager({"a": {0: 8}, "b": {0: 8}}, mode=QuotaMode.SHARED)
+    j1 = _job(uid=1, tenant="a", gpus=10)
+    qm.charge(j1)
+    j1.start_time = 100.0
+    j1.state = j1.state
+    # owner b below quota; pool exhausted -> j1 is a reclaim victim
+    victims = qm.reclaim_candidates("b", 0, [j1])
+    assert victims == [j1]
+    # isolated mode: never reclaims
+    qm2 = QuotaManager({"a": {0: 8}}, mode=QuotaMode.ISOLATED)
+    assert qm2.reclaim_candidates("b", 0, [j1]) == []
+
+
+def test_charge_over_quota_raises():
+    qm = QuotaManager({"a": {0: 4}})
+    with pytest.raises(ValueError):
+        qm.charge(_job(gpus=8))

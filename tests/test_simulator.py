@@ -1,0 +1,63 @@
+"""Discrete-event simulator + workload generator (§5)."""
+
+import numpy as np
+
+from repro.core import (ClusterState, QSCH, QSCHConfig, QueuePolicy,
+                        QuotaManager, RSCH, SimConfig, Simulator,
+                        inference_trace, trace_stats, training_trace)
+from repro.core.topology import small_topology
+
+
+def _sim(topo, state, policy=QueuePolicy.BACKFILL):
+    qm = QuotaManager({"t0": {0: 10_000}})
+    qsch = QSCH(qm, RSCH(topo), QSCHConfig(policy=policy))
+    return Simulator(state, qsch, SimConfig(tick_interval=30.0,
+                                            sample_interval=120.0,
+                                            binding_latency=10.0))
+
+
+def test_simulation_drains_all_jobs(topo, state):
+    jobs = training_trace(30, seed=1, arrival_rate_per_hour=600,
+                          mean_duration_s=600.0)
+    jobs = [j for j in jobs if j.n_gpus <= 64]     # fits the small cluster
+    sim = _sim(topo, state)
+    result = sim.run(jobs)
+    assert all(j.state.value == "completed" for j in result.jobs)
+    assert state.total_allocated() == 0
+    state.check_invariants()
+
+
+def test_sor_positive_under_load(topo, state):
+    jobs = training_trace(20, seed=2, arrival_rate_per_hour=1200,
+                          mean_duration_s=1800.0)
+    jobs = [j for j in jobs if j.n_gpus <= 64]
+    result = _sim(topo, state).run(jobs)
+    assert 0.0 < result.metrics.sor() <= 1.0
+    assert result.cycles > 0
+
+
+def test_binding_latency_separates_start_and_run(topo, state):
+    jobs = training_trace(5, seed=3, arrival_rate_per_hour=60)
+    jobs = [j for j in jobs if j.n_gpus <= 8][:2]
+    result = _sim(topo, state).run(jobs)
+    for j in result.jobs:
+        assert j.run_time == j.start_time + 10.0
+
+
+def test_training_trace_matches_paper_distribution():
+    """§5.1.1 / Fig 2: >90% of jobs below 8 GPUs but <10% of GPU-time;
+    >=256-GPU jobs >50% of GPU-time."""
+    jobs = training_trace(4000, seed=0)
+    stats = trace_stats(jobs)
+    assert stats.job_fraction_below(8) > 0.75
+    assert stats.job_fraction_below(16) > 0.9
+    assert stats.gpu_time_fraction_at_least(256) > 0.5
+    small_share = 1 - stats.gpu_time_fraction_at_least(8)
+    assert small_share < 0.10
+
+
+def test_inference_trace_properties():
+    jobs = inference_trace(100, seed=0, gpu_types=(0, 1))
+    assert all(not j.gang for j in jobs)
+    assert all(j.kind.value == "infer" for j in jobs)
+    assert {j.gpu_type for j in jobs} == {0, 1}

@@ -1,0 +1,88 @@
+"""Snapshot equivalence: incremental == full copy, always (§3.4.3)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterState, FullSnapshotter,
+                        IncrementalSnapshotter, Job, Placement,
+                        PodPlacement, snapshots_equal)
+from repro.core.topology import small_topology
+
+
+def _random_ops(state, rng, uid_start, n_ops):
+    """Apply random allocate/release/health ops; returns next uid."""
+    uid = uid_start
+    for _ in range(n_ops):
+        op = rng.integers(0, 4)
+        if op == 0:                                   # allocate
+            free = state.free_gpus()
+            nodes = np.nonzero(free > 0)[0]
+            if len(nodes) == 0:
+                continue
+            node = int(rng.choice(nodes))
+            k = int(rng.integers(1, free[node] + 1))
+            avail = np.nonzero(~state.gpu_busy[node]
+                               & state.gpu_healthy[node])[0][:k]
+            job = Job(uid=uid, tenant="t", gpu_type=0, n_pods=1,
+                      gpus_per_pod=len(avail))
+            state.allocate(job, Placement(pods=[PodPlacement(
+                node=node, gpu_indices=tuple(int(g) for g in avail))]))
+            uid += 1
+        elif op == 1 and state.allocations:           # release
+            state.release(int(rng.choice(list(state.allocations))))
+        elif op == 2:                                 # gpu health flip
+            n = int(rng.integers(0, state.n_nodes))
+            g = int(rng.integers(0, state.gpus_per_node))
+            if not state.gpu_busy[n, g]:
+                state.set_gpu_health(n, g, bool(rng.integers(0, 2)))
+        else:                                         # node health flip
+            n = int(rng.integers(0, state.n_nodes))
+            if not state.gpu_busy[n].any():
+                state.set_node_health(n, bool(rng.integers(0, 2)))
+    return uid
+
+
+@given(seed=st.integers(0, 10_000), rounds=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_incremental_equals_full(seed, rounds):
+    """Property: after any op sequence, the incremental snapshot equals a
+    fresh full copy."""
+    topo = small_topology(n_nodes=12, gpus_per_node=4)
+    state = ClusterState.create(topo)
+    inc = IncrementalSnapshotter()
+    rng = np.random.default_rng(seed)
+    uid = 0
+    for _ in range(rounds):
+        uid = _random_ops(state, rng, uid, n_ops=int(rng.integers(1, 10)))
+        snap_inc = inc.take(state)
+        snap_full = FullSnapshotter().take(state)
+        assert snapshots_equal(snap_inc, snap_full)
+        state.check_invariants()
+
+
+def test_incremental_copies_fewer_rows():
+    topo = small_topology(n_nodes=64, gpus_per_node=8)
+    state = ClusterState.create(topo)
+    inc = IncrementalSnapshotter()
+    inc.take(state)                      # first take = full copy
+    assert inc.rows_copied == 64
+    job = Job(uid=1, tenant="t", gpu_type=0, n_pods=1, gpus_per_pod=2)
+    state.allocate(job, Placement(pods=[PodPlacement(
+        node=5, gpu_indices=(0, 1))]))
+    inc.take(state)
+    assert inc.rows_copied == 65         # only the dirty row
+
+
+def test_snapshot_isolated_from_later_mutation():
+    topo = small_topology(n_nodes=4, gpus_per_node=4)
+    state = ClusterState.create(topo)
+    inc = IncrementalSnapshotter()
+    snap = inc.take(state)
+    free_before = snap.free_gpus.copy()
+    job = Job(uid=1, tenant="t", gpu_type=0, n_pods=1, gpus_per_pod=4)
+    state.allocate(job, Placement(pods=[PodPlacement(
+        node=0, gpu_indices=(0, 1, 2, 3))]))
+    # The retained snapshot object is refreshed only on the next take().
+    assert (snap.free_gpus == free_before).all()
+    snap2 = inc.take(state)
+    assert snap2.free_gpus[0] == 0

@@ -1,0 +1,58 @@
+"""Topology: scale-out tiers, HBD, link classes, JTTED optima (§3.3.5)."""
+
+import numpy as np
+
+from repro.core.topology import (ClusterTopology, DIST_CROSS,
+                                 DIST_SAME_LEAF, DIST_SAME_NODE,
+                                 DIST_SAME_SPINE, DIST_SAME_SUPERSPINE,
+                                 small_topology)
+
+
+def test_hierarchy_ids():
+    t = ClusterTopology(n_nodes=32, gpus_per_node=8, nodes_per_leaf=4,
+                        leaves_per_spine=2, spines_per_superspine=2,
+                        nodes_per_hbd=8)
+    assert t.n_leaf_groups == 8
+    assert t.leaf_id[0] == t.leaf_id[3] != t.leaf_id[4]
+    assert t.spine_id[0] == t.spine_id[7] != t.spine_id[8]
+    assert t.n_hbds == 4
+
+
+def test_node_distance_tiers():
+    t = ClusterTopology(n_nodes=32, gpus_per_node=8, nodes_per_leaf=4,
+                        leaves_per_spine=2, spines_per_superspine=2,
+                        nodes_per_hbd=4)
+    assert t.node_distance(0, 0) == DIST_SAME_NODE
+    assert t.node_distance(0, 3) == DIST_SAME_LEAF
+    assert t.node_distance(0, 7) == DIST_SAME_SPINE
+    assert t.node_distance(0, 15) == DIST_SAME_SUPERSPINE
+    assert t.node_distance(0, 31) == DIST_CROSS
+
+
+def test_pairwise_matches_scalar():
+    t = small_topology(n_nodes=16)
+    nodes = np.array([0, 3, 5, 12, 15])
+    mat = t.pairwise_node_distance(nodes)
+    for i, a in enumerate(nodes):
+        for j, b in enumerate(nodes):
+            assert mat[i, j] == t.node_distance(int(a), int(b))
+
+
+def test_link_classes():
+    t = ClusterTopology(n_nodes=2, gpus_per_node=8, nodes_per_leaf=2,
+                        leaves_per_spine=1, spines_per_superspine=1,
+                        nodes_per_hbd=2, nvlink_island=4, numa_split=4)
+    cls = t.gpu_link_class()
+    assert cls[0, 1] == 0          # same island
+    assert cls[0, 5] == 2          # cross island + cross NUMA
+    assert (np.diag(cls) == 0).all()
+    nic = t.nic_for_gpu()
+    assert nic[0] == nic[3] != nic[4]
+
+
+def test_jtted_optima():
+    t = small_topology(n_nodes=16, gpus_per_node=8, nodes_per_leaf=4)
+    assert t.optimal_node_num(8) == 1
+    assert t.optimal_node_num(9) == 2
+    assert t.optimal_group_num(32) == 1       # 4 nodes, one leaf group
+    assert t.optimal_group_num(33) == 2
