@@ -24,6 +24,7 @@ MODULES = [
     ("Fig13-14 inference GAR/GFR", "benchmarks.fig13_inference_gar"),
     ("Fig 15  GFR vs scale", "benchmarks.fig15_gfr_scale"),
     ("§3.4.3  snapshot bench", "benchmarks.snapshot_bench"),
+    ("§3.4    sched scale bench", "benchmarks.sched_scale_bench"),
     ("kernel  node-score bench", "benchmarks.kernel_bench"),
     ("§Roofline table", "benchmarks.roofline"),
 ]

@@ -8,7 +8,8 @@ from .qsch import QSCH, QSCHConfig, QueuePolicy
 from .quota import QuotaManager, QuotaMode
 from .rsch import RSCH, RSCHConfig, Strategy
 from .scoring import (BINPACK, E_BINPACK, E_SPREAD, SPREAD, ScoreWeights,
-                      node_scores_np)
+                      compute_node_scores, node_scores_np,
+                      select_gang_slots)
 from .simulator import SimConfig, Simulator, SimResult
 from .snapshot import (FullSnapshotter, IncrementalSnapshotter, Snapshot,
                        snapshots_equal)
@@ -21,7 +22,8 @@ __all__ = [
     "PodPlacement", "PRIO_HIGH", "PRIO_LOW", "PRIO_NORMAL", "size_bucket",
     "MetricsRecorder", "QSCH", "QSCHConfig", "QueuePolicy", "QuotaManager",
     "QuotaMode", "RSCH", "RSCHConfig", "Strategy", "BINPACK", "E_BINPACK",
-    "E_SPREAD", "SPREAD", "ScoreWeights", "node_scores_np", "SimConfig",
+    "E_SPREAD", "SPREAD", "ScoreWeights", "compute_node_scores",
+    "node_scores_np", "select_gang_slots", "SimConfig",
     "Simulator", "SimResult", "FullSnapshotter", "IncrementalSnapshotter",
     "Snapshot", "snapshots_equal", "ClusterTopology", "small_topology",
     "training_cluster_topology", "inference_trace", "trace_stats",

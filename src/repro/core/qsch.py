@@ -14,6 +14,12 @@ QSCH owns everything that happens to a job *before* RSCH places it:
   unblocks the beneficiary;
 * requeueing (§3.2.4): placement failures and preemptions return the job
   to its tenant queue instead of deadlocking the pipeline.
+
+Snapshot discipline (§3.4.3): one ``snapshotter.take`` per cycle.  Every
+mid-cycle mutation (placement commit, preemption release) is mirrored
+onto the working snapshot via :meth:`Snapshot.apply_placement` /
+:meth:`Snapshot.apply_release` deltas instead of re-copying the cluster,
+which is what made large-gang cycles O(placements × nodes).
 """
 
 from __future__ import annotations
@@ -140,8 +146,8 @@ class QSCH:
         # preemptible work that provably unblocks it.
         if (self.config.priority_preemption and result.blocked_head
                 is not None):
-            self._try_priority_preemption(result.blocked_head, state, now,
-                                          result)
+            self._try_priority_preemption(result.blocked_head, state, snap,
+                                          now, result)
         return result
 
     # -- policy bodies --------------------------------------------------
@@ -153,7 +159,6 @@ class QSCH:
             if not self._try_place(job, state, snap, now, result):
                 result.blocked_head = job
                 return
-            snap = self.snapshotter.take(state)
 
     def _cycle_best_effort(self, queue: List[Job], state: ClusterState,
                            snap: Snapshot, now: float, result: CycleResult
@@ -162,9 +167,8 @@ class QSCH:
         preemption -> large jobs can starve (reproduced in Fig 4)."""
         blocked: Optional[Job] = None
         for job in queue:
-            if self._try_place(job, state, snap, now, result):
-                snap = self.snapshotter.take(state)
-            elif blocked is None:
+            if not self._try_place(job, state, snap, now, result) \
+                    and blocked is None:
                 blocked = job
         # Note: deliberately do NOT set result.blocked_head -> no
         # priority preemption assist; that is what distinguishes the
@@ -178,17 +182,14 @@ class QSCH:
         head = queue[0]
         if self._try_place(head, state, snap, now, result):
             self._head_blocked_since.pop(head.uid, None)
-            snap = self.snapshotter.take(state)
             remaining = queue[1:]
         else:
             blocked_since = self._head_blocked_since.setdefault(
                 head.uid, now)
             if now - blocked_since >= self.config.backfill_head_timeout:
-                self._backfill_preempt_for(head, state, now, result)
-                snap = self.snapshotter.take(state)
+                self._backfill_preempt_for(head, state, snap, now, result)
                 if self._try_place(head, state, snap, now, result):
                     self._head_blocked_since.pop(head.uid, None)
-                    snap = self.snapshotter.take(state)
                 else:
                     result.blocked_head = head
             else:
@@ -198,11 +199,8 @@ class QSCH:
         for job in remaining:
             if job.state is not JobState.PENDING:
                 continue
-            placed = self._try_place(job, state, snap, now, result,
-                                     backfilled=result.blocked_head
-                                     is not None)
-            if placed:
-                snap = self.snapshotter.take(state)
+            self._try_place(job, state, snap, now, result,
+                            backfilled=result.blocked_head is not None)
 
     # -- placement ------------------------------------------------------
     def _try_place(self, job: Job, state: ClusterState, snap: Snapshot,
@@ -225,6 +223,9 @@ class QSCH:
             return False
         self.quota.charge(job)
         state.allocate(job, sched.placement)
+        # Mirror the commit onto the working snapshot (§3.4.3): later
+        # placements this cycle see it without re-taking the cluster.
+        snap.apply_placement(sched.placement)
         job.placement = sched.placement
         job.state = JobState.RUNNING
         job.start_time = now
@@ -243,9 +244,10 @@ class QSCH:
         job.state = JobState.COMPLETED
         job.end_time = now
 
-    def _preempt(self, job: Job, state: ClusterState, now: float,
-                 result: CycleResult) -> None:
-        state.release(job.uid)
+    def _preempt(self, job: Job, state: ClusterState, snap: Snapshot,
+                 now: float, result: CycleResult) -> None:
+        released = state.release(job.uid)
+        snap.apply_release(released)
         self.quota.refund(job)
         del self.running[job.uid]
         job.state = JobState.PREEMPTED
@@ -256,7 +258,8 @@ class QSCH:
 
     # -- preemption helpers (§3.2.3) --------------------------------------
     def _backfill_preempt_for(self, head: Job, state: ClusterState,
-                              now: float, result: CycleResult) -> None:
+                              snap: Snapshot, now: float,
+                              result: CycleResult) -> None:
         """Backfill preemption: evict backfilled jobs (newest first) until
         the head becomes feasible — but only if it provably can become
         feasible (conservative policy)."""
@@ -272,15 +275,15 @@ class QSCH:
         for victim in victims:
             if budget <= 0:
                 break
-            snap = self.snapshotter.take(state)
             if self._dynamic_admit(head, snap) and \
                     self.rsch.schedule(head, snap).placement is not None:
                 return
-            self._preempt(victim, state, now, result)
+            self._preempt(victim, state, snap, now, result)
             budget -= 1
 
     def _try_priority_preemption(self, job: Job, state: ClusterState,
-                                 now: float, result: CycleResult) -> None:
+                                 snap: Snapshot, now: float,
+                                 result: CycleResult) -> None:
         victims = [j for j in self.running.values()
                    if j.priority < job.priority and j.preemptible
                    and j.gpu_type == job.gpu_type]
@@ -300,11 +303,9 @@ class QSCH:
         for victim in victims:
             if budget <= 0:
                 break
-            snap = self.snapshotter.take(state)
             if self._dynamic_admit(job, snap):
                 break
-            self._preempt(victim, state, now, result)
+            self._preempt(victim, state, snap, now, result)
             budget -= 1
-        snap = self.snapshotter.take(state)
         if self._dynamic_admit(job, snap):
             self._try_place(job, state, snap, now, result)

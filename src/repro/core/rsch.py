@@ -26,14 +26,15 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .cluster import ClusterState
 from .job import Job, JobKind, Placement, PodPlacement
 from .scoring import (BINPACK, E_BINPACK, E_SPREAD, NEG_INF, SPREAD,
-                      ScoreWeights, node_scores_np)
+                      ScoreWeights, compute_node_scores, node_scores_np,
+                      select_gang_slots)
 from .snapshot import Snapshot
 from .topology import ClusterTopology
 
@@ -62,6 +63,17 @@ class RSCHConfig:
     espread_small_pod_gpus: int = 8
     # Schedule EP-style jobs at HBD granularity (§3.3.5 Scale-Up).
     hbd_granular_ep: bool = True
+    # Batched gang placement (§3.4): one fused filter+score pass +
+    # capacity-aware top-k slot selection for the whole gang, instead of
+    # re-scoring every node once per pod.  The sequential path is kept
+    # for A/B benchmarking (benchmarks/sched_scale_bench.py).
+    batched_gang: bool = True
+    # Score-pass backend: "np" (numpy, simulator default), "ref" (jnp
+    # oracle), "interpret" (Pallas on CPU), "pallas" (compiled TPU).
+    score_backend: str = "np"
+    # Same-node co-location bonus per already-placed pod of the job
+    # (node-level E-Binpack, §3.3.3).
+    colocate_bonus: float = 2.0
 
 
 @dataclasses.dataclass
@@ -78,6 +90,13 @@ class RSCH:
         self.config = config or RSCHConfig()
         self._link_class = topology.gpu_link_class()
         self._nic = topology.nic_for_gpu()
+        # Device selection runs once per placed pod; python lists over the
+        # G-sized slot axis beat numpy dispatch overhead at G=8.
+        self._nic_list = [int(n) for n in self._nic]
+        self._n_islands = int(self._nic.max()) + 1
+        # Static per-NodeNetGroup spine membership (topology never changes).
+        self._group_spine = topology.spine_id[np.searchsorted(
+            topology.leaf_id, np.arange(topology.n_leaf_groups))]
 
     # ------------------------------------------------------------------
     # Public API
@@ -90,7 +109,7 @@ class RSCH:
     def feasible(self, job: Job, snap: Snapshot) -> bool:
         """Dynamic-resource-admission check (§3.2.1): are there enough
         free, healthy GPUs in the job's node pool right now?"""
-        pool = (snap.gpu_type == job.gpu_type) & snap.node_healthy
+        pool = snap.candidate_pool(job.gpu_type)
         per_node_ok = snap.free_gpus >= job.gpus_per_pod
         capacity = int((snap.free_gpus // job.gpus_per_pod)[
             pool & per_node_ok].sum())
@@ -104,14 +123,12 @@ class RSCH:
                 and job.gpus_per_pod < self.config.espread_small_pod_gpus
                 and bool(snap.inference_zone.any())):
             result = self._schedule_with_mask(
-                job, snap, Strategy.E_SPREAD,
-                node_filter=snap.inference_zone)
+                job, snap, Strategy.E_SPREAD, zone="zone")
             if result.placement is not None:
                 return result
             # Remaining replicas: E-Binpack in the general pool (§3.3.4).
             return self._schedule_with_mask(
-                job, snap, Strategy.E_BINPACK,
-                node_filter=~snap.inference_zone)
+                job, snap, Strategy.E_BINPACK, zone="general")
         if strategy is Strategy.E_SPREAD:
             # Large inference pods get consolidated full nodes in the
             # general pool, keeping the dedicated zone for small
@@ -119,8 +136,7 @@ class RSCH:
             strategy = Strategy.E_BINPACK
             if bool(snap.inference_zone.any()):
                 result = self._schedule_with_mask(
-                    job, snap, strategy,
-                    node_filter=~snap.inference_zone)
+                    job, snap, strategy, zone="general")
                 if result.placement is not None:
                     return result
         return self._schedule_with_mask(job, snap, strategy, None)
@@ -129,75 +145,156 @@ class RSCH:
     # Core two-level placement
     # ------------------------------------------------------------------
     def _schedule_with_mask(self, job: Job, snap: Snapshot,
-                            strategy: Strategy,
-                            node_filter: Optional[np.ndarray]
+                            strategy: Strategy, zone: Optional[str]
                             ) -> ScheduleResult:
         topo = self.topology
-        pool = (snap.gpu_type == job.gpu_type) & snap.node_healthy
-        if node_filter is not None:
-            pool = pool & node_filter
-        free = snap.free_gpus.copy()        # mutated as pods are placed
+        pool = snap.candidate_pool(job.gpu_type, zone)
         if not pool.any():
             return ScheduleResult(None, "empty node pool")
 
         # --- Level 1: NodeNetGroup preselection (§3.4.2) ---------------
         enhanced = strategy in (Strategy.E_BINPACK, Strategy.E_SPREAD)
-        selected_groups = self._preselect_groups(job, snap, pool, free,
+        pod_slots = np.where(pool, snap.free_gpus // job.gpus_per_pod, 0)
+        selected_groups = self._preselect_groups(job, snap, pool, pod_slots,
                                                  enhanced, strategy)
         if selected_groups is None:
             return ScheduleResult(None, "no NodeNetGroup set satisfies job")
-        group_rank = {g: i for i, g in enumerate(selected_groups)}
-        in_groups = np.isin(topo.leaf_id, np.asarray(selected_groups))
+        # One gather resolves both group membership and the per-node
+        # anchor-group preference (rank table over groups -> node axis).
+        group_pref = np.zeros(topo.n_leaf_groups, dtype=np.float32)
+        for rank, g in enumerate(selected_groups):
+            group_pref[g] = 1.0 / (1.0 + rank)
+        topo_pref = group_pref[topo.leaf_id]
+        in_groups = topo_pref > 0.0
 
         # --- Level 2: node selection within selected groups ------------
         weights = _WEIGHTS[strategy]
         group_used = np.bincount(
             topo.leaf_id, weights=np.where(pool, snap.used_gpus, 0),
             minlength=topo.n_leaf_groups).astype(np.float32)
-        group_cap = np.bincount(
-            topo.leaf_id,
-            weights=np.where(pool, snap.gpu_healthy.sum(axis=1), 0),
-            minlength=topo.n_leaf_groups).astype(np.float32)
+        cap_key = ("group_cap", int(job.gpu_type), zone)
+        group_cap = snap.derived.get(cap_key)
+        if group_cap is None:
+            # Healthy capacity per group is delta-invariant -> cacheable
+            # for the rest of the cycle.
+            group_cap = np.bincount(
+                topo.leaf_id,
+                weights=np.where(pool, snap.healthy_per_node(), 0),
+                minlength=topo.n_leaf_groups).astype(np.float32)
+            snap.derived[cap_key] = group_cap
         group_load = group_used / np.maximum(group_cap, 1.0)
-        # Preference for earlier-ranked (anchor) groups keeps a multi-pod
-        # job inside as few groups as possible (§3.3.3 LeafGroup E-Binpack).
-        topo_pref = np.zeros(topo.n_nodes, dtype=np.float32)
-        for g, rank in group_rank.items():
-            members = topo.leaf_id == g
-            topo_pref[members] = 1.0 / (1.0 + rank)
+        # topo_pref (computed above) prefers earlier-ranked (anchor)
+        # groups, keeping a multi-pod job inside as few groups as
+        # possible (§3.3.3 LeafGroup E-Binpack).
+        mask = pool & in_groups
+        gload_nodes = group_load[topo.leaf_id]
+        # Same-node co-location bonus (node-level E-Binpack §3.3.3): pods
+        # of this job already on a node make it more attractive for the
+        # next pod; in the batched path it is folded into the per-node
+        # slot chains.
+        colocate = (self.config.colocate_bonus
+                    if enhanced and job.kind is not JobKind.INFER else 0.0)
+        if self.config.batched_gang:
+            nodes = self._select_nodes_batched(
+                job, snap, mask, gload_nodes, topo_pref, weights, colocate,
+                np.where(in_groups, pod_slots, 0))
+        else:
+            nodes = self._select_nodes_sequential(
+                job, snap, pool, in_groups, gload_nodes, topo_pref,
+                weights, colocate)
+        if nodes is None:
+            return ScheduleResult(None, "gang placement failed")
 
+        # --- Fine-grained device selection per chosen slot (§3.3.1) ----
+        # One vectorized gather extracts the availability rows of the
+        # selected nodes; the per-pod work is then pure python over
+        # G-sized lists (no per-pod numpy dispatch, no full-bitmap copy).
+        uniq = list(dict.fromkeys(nodes))
+        avail_rows = (~snap.gpu_busy[uniq]
+                      & snap.gpu_healthy[uniq]).tolist()
+        avail_map = dict(zip(uniq, avail_rows))
         pods: List[PodPlacement] = []
-        busy = snap.gpu_busy.copy()
-        for _ in range(job.n_pods):
-            mask = pool & in_groups
-            scores = node_scores_np(
-                free, snap.used_gpus + 0, mask, group_load[topo.leaf_id],
-                topo_pref, job.gpus_per_pod, topo.gpus_per_node, weights)
-            # Same-node co-location bonus (node-level E-Binpack §3.3.3):
-            # pods of this job already on a node make it maximally
-            # attractive for the next pod.
-            if enhanced and pods and job.kind is not JobKind.INFER:
-                for p in pods:
-                    if scores[p.node] > NEG_INF:
-                        scores[p.node] += 2.0
-            node = int(np.argmax(scores))
-            if scores[node] <= NEG_INF:
-                return ScheduleResult(None, "gang placement failed")
-            gpus = self._pick_devices(busy[node], snap.gpu_healthy[node],
-                                      job.gpus_per_pod)
+        for node in nodes:
+            avail = avail_map[node]
+            gpus = self._pick_from_avail(avail, job.gpus_per_pod)
             if gpus is None:
                 return ScheduleResult(None, "device-level selection failed")
-            busy[node, list(gpus)] = True
-            free[node] -= job.gpus_per_pod
+            for g in gpus:
+                avail[g] = False
             pods.append(PodPlacement(node=node, gpu_indices=gpus,
-                                     nic=int(self._nic[gpus[0]])))
+                                     nic=self._nic_list[gpus[0]]))
         placement = Placement(pods=pods)
         n_groups = len({int(topo.leaf_id[p.node]) for p in pods})
         return ScheduleResult(placement, "ok", groups_used=n_groups)
 
     # ------------------------------------------------------------------
+    # Node selection: batched (one fused pass) vs sequential (per pod)
+    # ------------------------------------------------------------------
+    def _select_nodes_batched(self, job: Job, snap: Snapshot,
+                              mask: np.ndarray, gload_nodes: np.ndarray,
+                              topo_pref: np.ndarray, weights: ScoreWeights,
+                              colocate: float,
+                              slots: Optional[np.ndarray] = None
+                              ) -> Optional[List[int]]:
+        """Whole-gang placement from ONE filter+score pass (§3.4).
+
+        The fused pass scores every node once; capacity expansion turns
+        each node into ``floor(free/gpus_per_pod)`` pod slots and the
+        heap-based top-k selection emulates the sequential argmax loop
+        exactly (same nodes, same order, same tie-breaking).
+        """
+        backend = self.config.score_backend
+        if backend == "np":
+            scores = node_scores_np(
+                snap.free_gpus, snap.used_gpus, mask, gload_nodes,
+                topo_pref, job.gpus_per_pod, self.topology.gpus_per_node,
+                weights)
+        else:
+            from ..kernels.ops import node_scores_and_slots
+            s, sl = node_scores_and_slots(
+                snap.free_gpus, snap.used_gpus, mask.astype(np.int32),
+                gload_nodes, topo_pref, request=job.gpus_per_pod,
+                gpus_per_node=self.topology.gpus_per_node, weights=weights,
+                backend=backend)
+            scores = np.asarray(s)
+            slots = np.asarray(sl).astype(np.int64)
+        return select_gang_slots(
+            scores, snap.free_gpus, job.gpus_per_pod, job.n_pods,
+            fit_weight=weights.fit, colocate_bonus=colocate, slots=slots)
+
+    def _select_nodes_sequential(self, job: Job, snap: Snapshot,
+                                 pool: np.ndarray, in_groups: np.ndarray,
+                                 gload_nodes: np.ndarray,
+                                 topo_pref: np.ndarray,
+                                 weights: ScoreWeights,
+                                 colocate: float) -> Optional[List[int]]:
+        """The replaced O(n_pods × n_nodes) loop: full filter+score pass
+        and argmax once per pod, with the per-pod co-location sweep.
+        Kept verbatim as the A/B baseline the batched engine is measured
+        against in ``benchmarks/sched_scale_bench.py``."""
+        free = snap.free_gpus.copy()        # mutated as pods are placed
+        backend = self.config.score_backend
+        nodes: List[int] = []
+        for _ in range(job.n_pods):
+            mask = pool & in_groups
+            scores = compute_node_scores(
+                free, snap.used_gpus + 0, mask, gload_nodes, topo_pref,
+                job.gpus_per_pod, self.topology.gpus_per_node, weights,
+                backend=backend)
+            if colocate and nodes:
+                for n in nodes:
+                    if scores[n] > NEG_INF:
+                        scores[n] += colocate
+            node = int(np.argmax(scores))
+            if scores[node] <= NEG_INF:
+                return None
+            free[node] -= job.gpus_per_pod
+            nodes.append(node)
+        return nodes
+
+    # ------------------------------------------------------------------
     def _preselect_groups(self, job: Job, snap: Snapshot, pool: np.ndarray,
-                          free: np.ndarray, enhanced: bool,
+                          pod_slots: np.ndarray, enhanced: bool,
                           strategy: Strategy) -> Optional[List[int]]:
         """Pick an ordered list of candidate NodeNetGroups.
 
@@ -206,17 +303,13 @@ class RSCH:
         * spread strategies: all groups, emptiest first;
         * large jobs: greedy minimal set of groups, preferring same-spine
           neighbours (JTTED: fewest groups, closest topology).
+
+        ``pod_slots`` is the per-node capacity expansion
+        ``floor(free / gpus_per_pod)`` restricted to the pool.
         """
         topo = self.topology
-        # A node contributes floor(free/pod) pod slots.
-        pod_slots = np.where(pool, free // job.gpus_per_pod, 0)
         group_slots = np.bincount(topo.leaf_id, weights=pod_slots,
                                   minlength=topo.n_leaf_groups).astype(int)
-        group_free = np.bincount(topo.leaf_id, weights=np.where(pool, free, 0),
-                                 minlength=topo.n_leaf_groups).astype(int)
-        group_used = np.bincount(topo.leaf_id,
-                                 weights=np.where(pool, snap.used_gpus, 0),
-                                 minlength=topo.n_leaf_groups).astype(int)
         candidates = np.nonzero(group_slots > 0)[0]
         if len(candidates) == 0:
             return None
@@ -226,78 +319,79 @@ class RSCH:
 
         fits_one = candidates[group_slots[candidates] >= job.n_pods]
         if len(fits_one) > 0:
+            # Only the best-ranked group is used; lexsort the (reversed)
+            # key tuples instead of a python sort with lambda keys.
+            group_free = np.bincount(
+                topo.leaf_id, weights=np.where(pool, snap.free_gpus, 0),
+                minlength=topo.n_leaf_groups).astype(int)
             if strategy in (Strategy.SPREAD, Strategy.E_SPREAD):
                 # Spread wants room: emptiest group first.
-                order = sorted(fits_one,
-                               key=lambda g: (-group_free[g], g))
-            elif enhanced:
-                # LeafGroup-level E-Binpack: busiest group that fits.
-                order = sorted(fits_one,
-                               key=lambda g: (-group_used[g],
-                                              group_free[g], g))
+                keys = (fits_one, -group_free[fits_one])
             else:
-                # Plain binpack is node-level only: first fitting group by
-                # best node score; approximate with most-used group too but
-                # without reserving empties (same order, documented).
-                order = sorted(fits_one,
-                               key=lambda g: (-group_used[g], g))
-            return [int(order[0])]
+                group_used = np.bincount(
+                    topo.leaf_id,
+                    weights=np.where(pool, snap.used_gpus, 0),
+                    minlength=topo.n_leaf_groups).astype(int)
+                if enhanced:
+                    # LeafGroup-level E-Binpack: busiest group that fits.
+                    keys = (fits_one, group_free[fits_one],
+                            -group_used[fits_one])
+                else:
+                    # Plain binpack is node-level only: first fitting group
+                    # by best node score; approximate with most-used group
+                    # too but without reserving empties (same order,
+                    # documented).
+                    keys = (fits_one, -group_used[fits_one])
+            return [int(fits_one[np.lexsort(keys)[0]])]
 
         # Multi-group job: greedy cover minimizing group count, preferring
         # same-spine neighbours of the seed group (topology-aware §3.3.5).
-        seed_order = sorted(candidates, key=lambda g: (-group_slots[g], g))
-        seed = int(seed_order[0])
-        group_spine = topo.spine_id[np.searchsorted(
-            topo.leaf_id, np.arange(topo.n_leaf_groups))]
-        chosen: List[int] = [seed]
-        covered = int(group_slots[seed])
-        rest = [int(g) for g in candidates if g != seed]
-        rest.sort(key=lambda g: (
-            0 if group_spine[g] == group_spine[seed] else 1,
-            -group_slots[g], g))
-        for g in rest:
-            if covered >= job.n_pods:
-                break
-            chosen.append(g)
-            covered += int(group_slots[g])
-        if covered < job.n_pods:
+        seed = int(candidates[np.lexsort(
+            (candidates, -group_slots[candidates]))[0]])
+        group_spine = self._group_spine
+        rest = candidates[candidates != seed]
+        rest = rest[np.lexsort((rest, -group_slots[rest],
+                                group_spine[rest] != group_spine[seed]))]
+        # Greedy prefix: smallest set of groups whose slot total covers the
+        # job (fits_one was empty, so the seed alone never suffices).
+        covered = int(group_slots[seed]) + np.cumsum(group_slots[rest])
+        cut = int(np.searchsorted(covered, job.n_pods)) + 1
+        if cut > len(rest):
             return None
-        return chosen
+        return [seed] + [int(g) for g in rest[:cut]]
 
     # ------------------------------------------------------------------
     # Fine-grained device selection (§3.3.1)
     # ------------------------------------------------------------------
     def _pick_devices(self, busy_row: np.ndarray, healthy_row: np.ndarray,
                       k: int) -> Optional[Tuple[int, ...]]:
-        """Choose ``k`` healthy free GPU slots minimizing link-class cost.
+        """Choose ``k`` healthy free GPU slots minimizing link-class cost
+        on one node row (see :meth:`_pick_from_avail`)."""
+        return self._pick_from_avail(
+            (~busy_row & healthy_row).tolist(), k)
 
-        Preference order: a single NVLink island, then a single NUMA
-        domain, then best-effort lowest link classes.
+    def _pick_from_avail(self, avail: List[bool], k: int
+                         ) -> Optional[Tuple[int, ...]]:
+        """Choose ``k`` available GPU slots minimizing link-class cost.
+
+        Preference order: a single NVLink island (intra-island link class
+        is 0, so the first island that fits is already cost-minimal),
+        then best-effort fill in (island, slot) order.  Pure python over
+        the G-sized row: this runs once per placed pod, and numpy call
+        dispatch dominated the old implementation at G=8.
         """
-        avail = np.nonzero(~busy_row & healthy_row)[0]
-        if len(avail) < k:
+        nic = self._nic_list
+        members: List[List[int]] = [[] for _ in range(self._n_islands)]
+        n_avail = 0
+        for g, a in enumerate(avail):
+            if a:
+                members[nic[g]].append(g)
+                n_avail += 1
+        if n_avail < k:
             return None
-        cls = self._link_class
-        best: Optional[Tuple[int, ...]] = None
-        best_cost = None
-        # Candidate seedings: group available GPUs by NVLink island / NUMA.
-        islands: Dict[int, List[int]] = {}
-        for g in avail:
-            islands.setdefault(int(self._nic[g]), []).append(int(g))
-        for members in islands.values():
-            if len(members) >= k:
-                cand = tuple(members[:k])
-                cost = self._combo_cost(cand, cls)
-                if best_cost is None or cost < best_cost:
-                    best, best_cost = cand, cost
-        if best is not None:
-            return best
-        # No single island fits: greedy fill ordered by island density.
-        ordered = sorted(avail, key=lambda g: (int(self._nic[g]), int(g)))
-        cand = tuple(int(g) for g in ordered[:k])
-        return cand
-
-    @staticmethod
-    def _combo_cost(combo: Sequence[int], cls: np.ndarray) -> int:
-        idx = np.asarray(combo)
-        return int(cls[np.ix_(idx, idx)].sum())
+        for m in members:
+            if len(m) >= k:
+                return tuple(m[:k])
+        # No single island fits: greedy fill in (island, slot) order.
+        flat = [g for m in members for g in m]
+        return tuple(flat[:k])

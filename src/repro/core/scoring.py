@@ -1,5 +1,5 @@
 """Node filter+score pass shared by RSCH, the jnp oracle and the Pallas
-kernel.
+kernel, plus the batched gang-placement slot selection built on top of it.
 
 For every candidate node the scheduler computes one fused score
 
@@ -22,11 +22,32 @@ This module is the *numpy* implementation used by the discrete-event
 simulator (cheap per call); ``repro.kernels.ref`` is the jnp oracle and
 ``repro.kernels.node_score`` the Pallas TPU kernel.  All three are
 asserted identical in ``tests/test_kernels.py``.
+:func:`compute_node_scores` is the single entry point that dispatches
+between them, so RSCH can switch backends via config.
+
+**Batched gang placement** (§3.4 search-space reduction): instead of
+re-running the full score pass once per pod, a gang job is placed with
+ONE fused pass.  Each valid node is expanded into
+``floor(free / gpus_per_pod)`` pod *slots*; the value of node ``i``'s
+``p``-th slot reproduces what the sequential per-pod rescoring loop
+would have seen at the step that consumed it:
+
+    slot(i, p) = base[i] + colocate_bonus * p
+               + w_fit * [free[i] - p*request == request]
+
+(the co-location bonus and the moving exact-fit term are the only parts
+of the score that depend on earlier pods of the same job — ``used``,
+``group_load`` and ``topo_pref`` are snapshot-static).  A lazy-greedy
+heap pop over these per-node slot chains is an *exact* emulation of the
+sequential argmax loop, including its lowest-index tie-breaking, at
+O(n + pods·log n) instead of O(pods·n).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
+from typing import List, Optional
 
 import numpy as np
 
@@ -66,3 +87,94 @@ def node_scores_np(free: np.ndarray, used: np.ndarray, mask: np.ndarray,
              + weights.group * group_load.astype(np.float32)
              + weights.topo * topo_pref.astype(np.float32))
     return np.where(valid, score, NEG_INF).astype(np.float32)
+
+
+def compute_node_scores(free: np.ndarray, used: np.ndarray,
+                        mask: np.ndarray, group_load: np.ndarray,
+                        topo_pref: np.ndarray, request: int,
+                        gpus_per_node: int, weights: ScoreWeights,
+                        backend: str = "np") -> np.ndarray:
+    """One API over the numpy reference and the jnp/Pallas kernels.
+
+    ``backend`` is ``"np"`` (default — no jax import, what the simulator
+    uses), ``"ref"`` (jnp oracle), ``"interpret"`` (Pallas interpreter,
+    CPU) or ``"pallas"`` (compiled TPU kernel).  All return the same
+    (n,) f32 score vector with ``-inf`` at invalid nodes.
+    """
+    if backend == "np":
+        return node_scores_np(free, used, mask, group_load, topo_pref,
+                              request, gpus_per_node, weights)
+    from ..kernels.ops import node_scores  # deferred: keep np path jax-free
+    return np.asarray(node_scores(
+        free, used, mask.astype(np.int32), group_load, topo_pref,
+        request=request, gpus_per_node=gpus_per_node, weights=weights,
+        backend=backend))
+
+
+def pod_slots_np(free: np.ndarray, scores: np.ndarray,
+                 request: int) -> np.ndarray:
+    """Capacity expansion: pod slots contributed by each scored node."""
+    valid = scores > NEG_INF
+    return np.where(valid, free // request, 0).astype(np.int64)
+
+
+def select_gang_slots(scores: np.ndarray, free: np.ndarray, request: int,
+                      n_pods: int, *, fit_weight: float = 0.0,
+                      colocate_bonus: float = 0.0,
+                      slots: Optional[np.ndarray] = None
+                      ) -> Optional[List[int]]:
+    """Capacity-aware top-k slot selection for a whole gang at once.
+
+    ``scores`` is the fused filter+score output for the *snapshot* free
+    counts (slot 0 of every node).  Returns the node index for each pod
+    in placement order, or ``None`` when fewer than ``n_pods`` slots
+    exist.  The heap holds exactly one entry per node — its current slot
+    value — so each pop is the argmax the sequential loop would have
+    taken (ties break toward the lower node index, matching
+    ``np.argmax``).
+    """
+    free = np.asarray(free)
+    if slots is None:
+        slots = pod_slots_np(free, scores, request)
+    if int(slots.sum()) < n_pods:
+        return None
+    cand = np.nonzero(slots > 0)[0]
+    # At most n_pods distinct nodes are ever popped, and a node's FIRST
+    # pop happens at its slot-0 value — which must then be >= the static
+    # slot-0 value of every never-popped node.  So the selection can be
+    # restricted to the top-n_pods candidates by (slot-0 value desc,
+    # index asc) before building the heap; everything below that line is
+    # unreachable.  argpartition keeps this O(n).
+    if len(cand) > n_pods:
+        vals = scores[cand]
+        part = np.argpartition(-vals, n_pods - 1)[:n_pods]
+        thresh = vals[part].min()
+        above = np.nonzero(vals > thresh)[0]
+        ties = np.nonzero(vals == thresh)[0][:n_pods - len(above)]
+        cand = cand[np.sort(np.concatenate([above, ties]))]
+    # Per-node slot chains.  base strips the slot-0 exact-fit term so it
+    # can be re-added at whichever slot the fit actually moves to.
+    sfree = free[cand].astype(np.int64)
+    base = scores[cand].astype(np.float64)
+    base = np.where(sfree == request, base - fit_weight, base)
+    exact_slot = np.where(sfree % request == 0, sfree // request - 1, -1)
+    cslots = slots[cand]
+
+    def slot_value(c: int, p: int) -> float:
+        v = base[c] + colocate_bonus * p
+        if p == exact_slot[c]:
+            v += fit_weight
+        return v
+
+    heap = list(zip((-np.where(sfree == request, base + fit_weight, base)
+                     ).tolist(), cand.tolist(), range(len(cand))))
+    heapq.heapify(heap)
+    placed = [0] * len(cand)
+    order: List[int] = []
+    while len(order) < n_pods:
+        _, i, c = heapq.heappop(heap)
+        order.append(i)
+        placed[c] += 1
+        if placed[c] < cslots[c]:
+            heapq.heappush(heap, (-slot_value(c, placed[c]), i, c))
+    return order

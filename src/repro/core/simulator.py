@@ -55,8 +55,14 @@ class Simulator:
         self.metrics = MetricsRecorder(state.topology)
         self._heap: List = []
         self._seq = itertools.count()
+        # Count of SUBMIT events still in the heap — keeps the "anything
+        # left to schedule?" check O(1) instead of an O(heap) scan per
+        # tick/sample event.
+        self._pending_submissions = 0
 
     def _push(self, t: float, kind: int, payload=None) -> None:
+        if kind == _SUBMIT:
+            self._pending_submissions += 1
         heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
 
     def run(self, jobs: Sequence[Job]) -> SimResult:
@@ -75,6 +81,8 @@ class Simulator:
 
         while self._heap:
             now, kind, _, payload = heapq.heappop(self._heap)
+            if kind == _SUBMIT:
+                self._pending_submissions -= 1
             if cfg.horizon is not None and now > cfg.horizon:
                 break
             if kind == _SUBMIT:
@@ -113,4 +121,4 @@ class Simulator:
                          preemptions=preemptions)
 
     def _has_future_submissions(self) -> bool:
-        return any(k == _SUBMIT for _, k, _, _ in self._heap)
+        return self._pending_submissions > 0

@@ -12,16 +12,25 @@ comparison and ``tests/test_snapshot.py`` property-checks equivalence.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
 from .cluster import ClusterState
+from .job import Placement
 
 
 @dataclasses.dataclass
 class Snapshot:
-    """Immutable-by-convention array bundle RSCH scores against."""
+    """Immutable-by-convention array bundle RSCH scores against.
+
+    The one sanctioned mutation is the *placement delta*
+    (:meth:`apply_placement` / :meth:`apply_release`): after QSCH commits
+    a placement to the live ``ClusterState`` mid-cycle, it applies the
+    same change to the working snapshot instead of re-taking a full one,
+    so one scheduling cycle costs exactly one ``snapshotter.take``
+    (§3.4.3 snapshot memory optimization).
+    """
 
     free_gpus: np.ndarray       # (n_nodes,) int32
     used_gpus: np.ndarray       # (n_nodes,) int32
@@ -31,6 +40,76 @@ class Snapshot:
     gpu_type: np.ndarray        # (n_nodes,) int32
     inference_zone: np.ndarray  # (n_nodes,) bool
     version: int = 0
+    # Lazy healthy-device count per node; placement deltas never change
+    # health, so it survives a whole cycle's worth of schedule calls.
+    _healthy_count: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    # Cached §3.4.1 node-pool masks, keyed by (gpu_type, zone selector);
+    # inputs (gpu_type, node_healthy, inference_zone) are delta-invariant,
+    # so the cache survives mid-cycle placements and is cleared on take().
+    _pool_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    # Scratch for delta-invariant derived arrays (e.g. per-group healthy
+    # capacity); same lifetime as _pool_cache.  Never store anything here
+    # that depends on free/used/busy.
+    derived: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def healthy_per_node(self) -> np.ndarray:
+        """(n_nodes,) healthy device count, cached across schedule calls."""
+        if self._healthy_count is None:
+            self._healthy_count = self.gpu_healthy.sum(
+                axis=1).astype(np.int32)
+        return self._healthy_count
+
+    def candidate_pool(self, gpu_type: int,
+                       zone: Optional[str] = None) -> np.ndarray:
+        """GPU-Type-based Node Pool mask (§3.4.1), optionally restricted
+        to the inference dedicated zone (``"zone"``) or its complement
+        (``"general"``).  Cached — the search-space restriction is a dict
+        hit instead of two O(n) boolean passes per schedule call."""
+        key = (int(gpu_type), zone)
+        mask = self._pool_cache.get(key)
+        if mask is None:
+            mask = (self.gpu_type == gpu_type) & self.node_healthy
+            if zone == "zone":
+                mask = mask & self.inference_zone
+            elif zone == "general":
+                mask = mask & ~self.inference_zone
+            self._pool_cache[key] = mask
+        return mask
+
+    def invalidate_caches(self) -> None:
+        """Drop cached pool masks / derived arrays (called by the
+        snapshotters after refreshing rows from the live state)."""
+        self._healthy_count = None
+        self._pool_cache.clear()
+        self.derived.clear()
+
+    # -- placement deltas (§3.4.3) -------------------------------------
+    def apply_placement(self, placement: Placement) -> None:
+        """Mark a just-committed placement's devices busy and refresh the
+        touched rows — identical to what a fresh ``take`` would see,
+        because ``ClusterState.allocate`` only flips busy bits."""
+        for pod in placement.pods:
+            self.gpu_busy[pod.node, list(pod.gpu_indices)] = True
+        self._refresh_rows(placement.nodes)
+
+    def apply_release(self, placement: Placement) -> None:
+        """Inverse delta for a mid-cycle preemption/release."""
+        for pod in placement.pods:
+            self.gpu_busy[pod.node, list(pod.gpu_indices)] = False
+        self._refresh_rows(placement.nodes)
+
+    def _refresh_rows(self, nodes: Iterable[int]) -> None:
+        idx = np.unique(np.fromiter((int(n) for n in nodes),
+                                    dtype=np.int64))
+        usable = self.gpu_healthy[idx] & ~self.gpu_busy[idx]
+        free = usable.sum(axis=1).astype(np.int32)
+        self.free_gpus[idx] = np.where(self.node_healthy[idx], free, 0)
+        self.used_gpus[idx] = (
+            self.gpu_busy[idx] & self.gpu_healthy[idx]
+        ).sum(axis=1).astype(np.int32)
 
 
 class FullSnapshotter:
@@ -95,6 +174,9 @@ class IncrementalSnapshotter:
             snap.node_healthy[idx] = state.node_healthy[idx]
             snap.gpu_type[idx] = state.gpu_type[idx]
             snap.inference_zone[idx] = state.inference_zone[idx]
+            # Refreshed rows may change health/type -> cached pool masks
+            # and derived arrays are stale.
+            snap.invalidate_caches()
             self.rows_copied += len(dirty)
         state.dirty_nodes.clear()
         snap.version = self._version

@@ -54,6 +54,33 @@ def _score_kernel(free_ref, used_ref, mask_ref, gload_ref, topo_ref,
     out_ref[...] = jnp.where(valid, score, NEG_INF)
 
 
+def _score_slots_kernel(free_ref, used_ref, mask_ref, gload_ref, topo_ref,
+                        score_ref, slots_ref, *, request: float,
+                        request_i: int, inv_g: float, w_used: float,
+                        w_fit: float, w_group: float, w_topo: float
+                        ) -> None:
+    """Fused score + capacity expansion for batched gang placement.
+
+    Alongside every node's score the kernel emits its pod-slot count
+    ``floor(free / request)`` (0 where invalid), so one VPU pass over the
+    node table feeds the whole-gang top-k slot selection — the per-pod
+    rescoring loop disappears (§3.4).
+    """
+    free_i = free_ref[...]
+    free = free_i.astype(jnp.float32)
+    used = used_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]
+    gload = gload_ref[...]
+    topo = topo_ref[...]
+    valid = (mask != 0) & (free >= request)
+    exact = (free == request).astype(jnp.float32)
+    score = (w_used * used * inv_g + w_fit * exact
+             + w_group * gload + w_topo * topo)
+    score_ref[...] = jnp.where(valid, score, NEG_INF)
+    slots_ref[...] = jnp.where(valid, free_i // request_i, 0
+                               ).astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "request", "gpus_per_node", "w_used", "w_fit", "w_group", "w_topo",
     "interpret"))
@@ -86,6 +113,44 @@ def node_scores_pallas(free: jnp.ndarray, used: jnp.ndarray,
         in_specs=[blk(), blk(), blk(), blk(), blk()],
         out_specs=blk(),
         out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        interpret=interpret,
+    )(free.astype(jnp.int32), used.astype(jnp.int32),
+      mask.astype(jnp.int32), group_load.astype(jnp.float32),
+      topo_pref.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "request", "gpus_per_node", "w_used", "w_fit", "w_group", "w_topo",
+    "interpret"))
+def node_scores_slots_pallas(free: jnp.ndarray, used: jnp.ndarray,
+                             mask: jnp.ndarray, group_load: jnp.ndarray,
+                             topo_pref: jnp.ndarray, *, request: int,
+                             gpus_per_node: int, w_used: float,
+                             w_fit: float, w_group: float, w_topo: float,
+                             interpret: bool = False):
+    """Fused (scores, pod_slots) over a 2-D node table of shape
+    (rows, LANE) — the batched gang-placement front half.  Layout
+    contract matches :func:`node_scores_pallas`."""
+    rows, lane = free.shape
+    if lane != LANE:
+        raise ValueError(f"lane dim must be {LANE}, got {lane}")
+    if rows % BLOCK_ROWS:
+        raise ValueError(f"rows ({rows}) must be a multiple of "
+                         f"{BLOCK_ROWS}")
+    grid = (rows // BLOCK_ROWS,)
+    blk = lambda: pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0))
+    kernel = functools.partial(
+        _score_slots_kernel, request=float(request),
+        request_i=int(request), inv_g=1.0 / float(gpus_per_node),
+        w_used=float(w_used), w_fit=float(w_fit), w_group=float(w_group),
+        w_topo=float(w_topo))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[blk(), blk(), blk(), blk(), blk()],
+        out_specs=[blk(), blk()],
+        out_shape=[jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, LANE), jnp.int32)],
         interpret=interpret,
     )(free.astype(jnp.int32), used.astype(jnp.int32),
       mask.astype(jnp.int32), group_load.astype(jnp.float32),

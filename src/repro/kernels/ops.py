@@ -69,6 +69,47 @@ def node_scores(free, used, mask, group_load, topo_pref, *, request: int,
     return out.reshape(padded)[:n]
 
 
+def node_scores_and_slots(free, used, mask, group_load, topo_pref, *,
+                          request: int, gpus_per_node: int,
+                          weights: Optional[ScoreWeights] = None,
+                          w_used: float = 0.0, w_fit: float = 0.0,
+                          w_group: float = 0.0, w_topo: float = 0.0,
+                          backend: str = "ref"):
+    """Fused (scores, pod_slots) pass for batched gang placement.
+
+    One sweep over the node table yields both the per-node score and the
+    number of pod slots ``floor(free / request)`` each node contributes
+    (0 where invalid), feeding the whole-gang top-k slot selection in
+    :func:`repro.core.scoring.select_gang_slots`.
+    """
+    if weights is not None:
+        w_used, w_fit = weights.used, weights.fit
+        w_group, w_topo = weights.group, weights.topo
+    free = jnp.asarray(free)
+    n = free.shape[0]
+    kw = dict(request=request, gpus_per_node=gpus_per_node, w_used=w_used,
+              w_fit=w_fit, w_group=w_group, w_topo=w_topo)
+
+    if backend == "ref":
+        from .ref import node_scores_slots_ref
+        return node_scores_slots_ref(
+            free, jnp.asarray(used), jnp.asarray(mask),
+            jnp.asarray(group_load), jnp.asarray(topo_pref), **kw)
+    if backend not in ("pallas", "interpret"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    padded = max(_ROW, -(-n // _ROW) * _ROW)
+    rows = padded // _ns.LANE
+    args2d = []
+    for arr, fill in ((free, 0), (used, 0), (mask, 0),
+                      (group_load, 0.0), (topo_pref, 0.0)):
+        a = _pad_to(jnp.asarray(arr), padded, fill)
+        args2d.append(a.reshape(rows, _ns.LANE))
+    scores, slots = _ns.node_scores_slots_pallas(
+        *args2d, interpret=(backend == "interpret"), **kw)
+    return scores.reshape(padded)[:n], slots.reshape(padded)[:n]
+
+
 def best_node(free, used, mask, group_load, topo_pref, *, request: int,
               gpus_per_node: int, weights: ScoreWeights,
               backend: str = "ref") -> int:

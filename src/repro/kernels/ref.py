@@ -38,6 +38,22 @@ def node_scores_ref(free: jnp.ndarray, used: jnp.ndarray,
     return jnp.where(valid, score, NEG_INF).astype(jnp.float32)
 
 
+def node_scores_slots_ref(free: jnp.ndarray, used: jnp.ndarray,
+                          mask: jnp.ndarray, group_load: jnp.ndarray,
+                          topo_pref: jnp.ndarray, *, request: int,
+                          gpus_per_node: int, w_used: float, w_fit: float,
+                          w_group: float, w_topo: float):
+    """Oracle for the fused (scores, pod_slots) batched-gang pass."""
+    scores = node_scores_ref(free, used, mask, group_load, topo_pref,
+                             request=request, gpus_per_node=gpus_per_node,
+                             w_used=w_used, w_fit=w_fit, w_group=w_group,
+                             w_topo=w_topo)
+    free_i = free.astype(jnp.int32)
+    valid = (mask != 0) & (free_i >= request)
+    slots = jnp.where(valid, free_i // request, 0).astype(jnp.int32)
+    return scores, slots
+
+
 def wkv6_ref(r, k, v, w, u, s0):
     """Pure-jnp oracle for the RWKV-6 WKV recurrence.
 

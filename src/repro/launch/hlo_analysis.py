@@ -211,13 +211,72 @@ class HloModule:
         if instr.opcode in ("dynamic-slice", "slice", "gather"):
             # Reads only the sliced window, not the whole operand.
             return 2.0 * instr.out_bytes()
-        if instr.opcode == "fusion":
+        if instr.opcode in ("fusion", "call"):
+            # XLA:CPU wraps parallelized fusions in a ``call`` to a
+            # ``parallel_*`` computation (e.g. the scan body's
+            # dynamic-slice over the stacked weights); billing the call
+            # boundary like a fusion keeps the slice-aware accounting —
+            # otherwise every scan step is charged the full stack.
             return self._fusion_bytes(comp, instr)
         total = float(instr.out_bytes())
         for op in instr.operands:
             shp = self._operand_shape(comp, op)
             if shp:
                 total += _nbytes(*shp)
+        return total
+
+    def _param_names(self, comp: str) -> Dict[int, str]:
+        """Parameter index -> instruction name inside a computation."""
+        out: Dict[int, str] = {}
+        for fi in self.computations.get(comp, []):
+            if fi.opcode == "parameter":
+                m = re.match(r"(\d+)\)", fi.rest)
+                if m:
+                    out[int(m.group(1))] = fi.name
+        return out
+
+    def _sliced_read_bytes(self, comp: str, value: str,
+                           depth: int = 0) -> Optional[float]:
+        """Bytes actually read from ``value`` if it is consumed ONLY by
+        slicing ops — directly, through bitcast/copy/convert, or as a
+        slice-only parameter of a nested fusion/call (XLA:CPU wraps
+        parallelized fusions in ``call %parallel_*`` computations whose
+        body is another fusion).  Returns ``None`` when any consumer
+        reads the full operand."""
+        if depth > 8:
+            return None
+        consumers = [fi for fi in self.computations.get(comp, [])
+                     if value in fi.operands]
+        if not consumers:
+            return None
+        total = 0.0
+        for fi in consumers:
+            if fi.opcode in ("dynamic-slice", "slice", "gather"):
+                total += fi.out_bytes()
+            elif fi.opcode in ("bitcast", "copy", "convert"):
+                inner = self._sliced_read_bytes(comp, fi.name, depth + 1)
+                if inner is None:
+                    return None
+                total += inner
+            elif fi.opcode in ("fusion", "call"):
+                called = _CALLS_RE.search(fi.rest)
+                if not called:
+                    return None
+                inner_name = called.group(1)
+                params = self._param_names(inner_name)
+                for j, op in enumerate(fi.operands):
+                    if op != value:
+                        continue
+                    pname = params.get(j)
+                    if pname is None:
+                        return None
+                    inner = self._sliced_read_bytes(inner_name, pname,
+                                                    depth + 1)
+                    if inner is None:
+                        return None
+                    total += inner
+            else:
+                return None
         return total
 
     def _fusion_bytes(self, comp: str, instr: Instr) -> float:
@@ -249,12 +308,7 @@ class HloModule:
                 and root.operands:
             root = inner_defs.get(root.operands[0])
         # param index -> name inside the fused computation
-        param_names: Dict[int, str] = {}
-        for fi in inner:
-            if fi.opcode == "parameter":
-                m = re.match(r"(\d+)\)", fi.rest)
-                if m:
-                    param_names[int(m.group(1))] = fi.name
+        param_names = self._param_names(inner_name)
         aliased_param: Optional[str] = None
         if root is not None and root.opcode == "dynamic-update-slice":
             upd = (self._operand_shape(inner_name, root.operands[1])
@@ -284,12 +338,9 @@ class HloModule:
             if pname is not None and pname == aliased_param:
                 continue                      # in-place DUS buffer
             if pname is not None and inner:
-                consumers = [fi for fi in inner
-                             if pname in fi.operands]
-                if consumers and all(
-                        fi.opcode in ("dynamic-slice", "slice", "gather")
-                        for fi in consumers):
-                    total += sum(fi.out_bytes() for fi in consumers)
+                sliced = self._sliced_read_bytes(inner_name, pname)
+                if sliced is not None:
+                    total += sliced
                     continue
             total += _nbytes(*shp)
         return total

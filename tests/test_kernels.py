@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="install .[test] for the "
+                    "property-based kernel sweep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.scoring import (BINPACK, E_BINPACK, E_SPREAD, NEG_INF,
@@ -62,6 +65,23 @@ def test_padding_rows_never_win():
     idx = best_node(free, used, mask, gl, tp, request=4, gpus_per_node=8,
                     weights=E_BINPACK, backend="interpret")
     assert idx == 17
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize("n", [1, 130, 1000, 8193])
+def test_scores_and_slots_fused_pass(backend, n):
+    """Batched gang placement front half: the fused (scores, slots) pass
+    agrees with the scalar score kernel + floor(free/request) expansion."""
+    from repro.kernels.ops import node_scores_and_slots
+    rng = np.random.default_rng(n)
+    free, used, mask, gl, tp = _table(rng, n)
+    scores, slots = node_scores_and_slots(
+        free, used, mask, gl, tp, request=4, gpus_per_node=8,
+        weights=E_BINPACK, backend=backend)
+    want_scores = node_scores_np(free, used, mask, gl, tp, 4, 8, E_BINPACK)
+    want_slots = np.where(want_scores > NEG_INF, free // 4, 0)
+    np.testing.assert_allclose(np.asarray(scores), want_scores, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(slots), want_slots)
 
 
 def test_no_valid_node_returns_minus_one():

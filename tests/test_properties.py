@@ -1,6 +1,10 @@
 """Hypothesis property tests on system-wide invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install .[test] for the "
+                    "property-based invariant sweep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ClusterState, QSCH, QSCHConfig, QueuePolicy,

@@ -127,3 +127,35 @@ def test_ordering_priority_time_size(topo, state):
     qsch.submit(_job(3, gpus=2, prio=50, t=5.0))
     order = [j.uid for j in qsch.pending_jobs()]
     assert order == [3, 2, 1]      # prio desc, then size asc tiebreak
+
+
+def test_one_snapshot_take_per_cycle(topo, state):
+    """§3.4.3: mid-cycle placements are mirrored onto the working
+    snapshot as deltas; the cluster is snapshotted exactly once."""
+    qsch = make_qsch(topo, state)
+    takes = []
+    orig = qsch.snapshotter.take
+    qsch.snapshotter.take = lambda s: takes.append(1) or orig(s)
+    for i in range(10):
+        qsch.submit(_job(100 + i, gpus=8))
+    res = qsch.cycle(state, 0.0)
+    assert len(res.scheduled) == 10
+    assert len(takes) == 1
+    # later placements saw the earlier ones: 10 distinct nodes
+    assert len({j.placement.pods[0].node for j in res.scheduled}) == 10
+
+
+def test_snapshot_placement_delta_equals_retake(topo, state):
+    from repro.core import FullSnapshotter, snapshots_equal
+    from repro.core.rsch import RSCH, RSCHConfig
+
+    rsch = RSCH(topo, RSCHConfig())
+    snap = FullSnapshotter().take(state)
+    job = _job(1, gpus=4, n_pods=3)
+    placement = rsch.schedule(job, snap).placement
+    state.allocate(job, placement)
+    snap.apply_placement(placement)
+    assert snapshots_equal(snap, FullSnapshotter().take(state))
+    released = state.release(job.uid)
+    snap.apply_release(released)
+    assert snapshots_equal(snap, FullSnapshotter().take(state))

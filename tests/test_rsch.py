@@ -129,3 +129,65 @@ def test_unhealthy_devices_skipped(topo, state):
     r = rsch.schedule(j, _snap(state))
     assert r.placement is not None
     assert r.placement.pods[0].node != 0   # node 0 has only 7 healthy
+
+
+# ----------------------------------------------------------------------
+# Batched gang placement (§3.4): one fused pass must equal the per-pod
+# sequential loop — same nodes, same order, same devices.
+# ----------------------------------------------------------------------
+def _fragment(state, rng):
+    for node in range(state.n_nodes):
+        k = int(rng.integers(0, state.gpus_per_node + 1))
+        if k and rng.random() < 0.6:
+            free = np.nonzero(~state.gpu_busy[node])[0][:k]
+            state.gpu_busy[node, free] = True
+
+
+@pytest.mark.parametrize("strategy", list(Strategy))
+@pytest.mark.parametrize("n_pods,gpus", [(1, 8), (4, 8), (8, 4), (12, 2)])
+def test_batched_matches_sequential(topo, strategy, n_pods, gpus):
+    import zlib
+    rng = np.random.default_rng(
+        zlib.crc32(f"{strategy.value}-{n_pods}-{gpus}".encode()))
+    state = ClusterState.create(topo)
+    _fragment(state, rng)
+    state.set_gpu_health(1, 0, False)
+    snap = _snap(state)
+    kind = JobKind.INFER if strategy in (Strategy.SPREAD,
+                                         Strategy.E_SPREAD) else JobKind.TRAIN
+    job = Job(uid=1, tenant="t0", gpu_type=0, n_pods=n_pods,
+              gpus_per_pod=gpus, kind=kind, gang=(kind is JobKind.TRAIN))
+    kw = dict(train_strategy=strategy, infer_strategy=strategy)
+    rb = _rsch(topo, batched_gang=True, **kw).schedule(job, snap)
+    rs = _rsch(topo, batched_gang=False, **kw).schedule(job, snap)
+    assert (rb.placement is None) == (rs.placement is None)
+    if rb.placement is not None:
+        assert ([(p.node, p.gpu_indices) for p in rb.placement.pods]
+                == [(p.node, p.gpu_indices) for p in rs.placement.pods])
+
+
+def test_batched_slot_expansion_colocates(topo, state):
+    """A node contributes floor(free/gpus_per_pod) slots; the co-location
+    bonus folded into the slot chain keeps the gang on one node."""
+    rsch = _rsch(topo, train_strategy=Strategy.E_BINPACK)
+    j = Job(uid=1, tenant="t0", gpu_type=0, n_pods=4, gpus_per_pod=2,
+            kind=JobKind.TRAIN)
+    r = rsch.schedule(j, _snap(state))
+    assert r.placement is not None
+    assert len({p.node for p in r.placement.pods}) == 1
+
+
+def test_batched_gang_all_or_nothing(topo, state):
+    rsch = _rsch(topo, batched_gang=True)
+    res = rsch.schedule(_train_job(uid=1, n_pods=17, gpus=8), _snap(state))
+    assert res.placement is None
+    assert state.total_allocated() == 0
+
+
+def test_select_gang_slots_insufficient_capacity():
+    from repro.core.scoring import NEG_INF, select_gang_slots
+    scores = np.asarray([1.0, NEG_INF, 0.5], dtype=np.float32)
+    free = np.asarray([8, 8, 4])
+    assert select_gang_slots(scores, free, 4, 4) is None     # 3 slots < 4
+    picks = select_gang_slots(scores, free, 4, 3)
+    assert picks == [0, 0, 2]                                # 2+1 slots

@@ -24,7 +24,8 @@ def rules():
 @pytest.fixture(scope="module")
 def rules_16x16():
     from jax.sharding import AbstractMesh
-    return ShardingRules(AbstractMesh((16, 16), ("data", "model")))
+    # jax 0.4.x takes one shape tuple of (name, size) pairs.
+    return ShardingRules(AbstractMesh((("data", 16), ("model", 16))))
 
 
 def test_mlp_rules(rules_16x16):

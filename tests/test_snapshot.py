@@ -1,6 +1,10 @@
 """Snapshot equivalence: incremental == full copy, always (§3.4.3)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install .[test] for the "
+                    "property-based equivalence sweep")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ClusterState, FullSnapshotter,
@@ -71,6 +75,39 @@ def test_incremental_copies_fewer_rows():
         node=5, gpu_indices=(0, 1))]))
     inc.take(state)
     assert inc.rows_copied == 65         # only the dirty row
+
+
+@given(seed=st.integers(0, 10_000), n_jobs=st.integers(1, 12))
+@settings(max_examples=25, deadline=None)
+def test_placement_delta_equals_retake(seed, n_jobs):
+    """Property (§3.4.3): applying allocate/release deltas to a live
+    snapshot is indistinguishable from re-taking it."""
+    topo = small_topology(n_nodes=12, gpus_per_node=4)
+    state = ClusterState.create(topo)
+    snap = FullSnapshotter().take(state)
+    rng = np.random.default_rng(seed)
+    live = []
+    for uid in range(n_jobs):
+        if live and rng.random() < 0.3:
+            victim = live.pop(int(rng.integers(0, len(live))))
+            snap.apply_release(state.release(victim))
+            continue
+        free = state.free_gpus()
+        nodes = np.nonzero(free > 0)[0]
+        if len(nodes) == 0:
+            continue
+        node = int(rng.choice(nodes))
+        k = int(rng.integers(1, free[node] + 1))
+        avail = np.nonzero(~state.gpu_busy[node]
+                           & state.gpu_healthy[node])[0][:k]
+        job = Job(uid=uid, tenant="t", gpu_type=0, n_pods=1,
+                  gpus_per_pod=len(avail))
+        placement = Placement(pods=[PodPlacement(
+            node=node, gpu_indices=tuple(int(g) for g in avail))])
+        state.allocate(job, placement)
+        snap.apply_placement(placement)
+        live.append(uid)
+    assert snapshots_equal(snap, FullSnapshotter().take(state))
 
 
 def test_snapshot_isolated_from_later_mutation():
