@@ -107,6 +107,9 @@ def print_metrics(tag: str, result: SimResult) -> Dict[str, float]:
     print(f"    median GAR {rep['median_gar']:.3f}   SOR {rep['sor']:.3f}"
           f"   mean GFR {rep['mean_gfr']:.3f}"
           f"   preemptions {result.preemptions}")
+    print(f"    waits: quota-rejected {result.admit_rejected}"
+          f"   infeasible {result.infeasible}"
+          f"   requeues {result.requeues}")
     jw = rep["jwtd_mean"]
     if jw:
         print("    JWTD(s): " + "  ".join(

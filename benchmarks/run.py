@@ -25,6 +25,7 @@ MODULES = [
     ("Fig 15  GFR vs scale", "benchmarks.fig15_gfr_scale"),
     ("§3.4.3  snapshot bench", "benchmarks.snapshot_bench"),
     ("§3.4    sched scale bench", "benchmarks.sched_scale_bench"),
+    ("framework plugin bench", "benchmarks.plugin_bench"),
     ("kernel  node-score bench", "benchmarks.kernel_bench"),
     ("§Roofline table", "benchmarks.roofline"),
 ]

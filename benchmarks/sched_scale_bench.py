@@ -17,7 +17,12 @@ This benchmark measures, at 1k / 10k / 50k nodes:
 * the speedup of batched over sequential — asserted >= 5x at 10k nodes,
   the acceptance bar for this optimization;
 * placement equivalence: batched and sequential must pick identical
-  node sequences on every measured cycle.
+  node sequences on every measured cycle;
+* plugin-framework parity: an RSCH built from explicit default
+  profiles (``repro.core.framework``) must produce *byte-identical*
+  placements to the legacy ``Strategy`` shim, with per-cycle time
+  within 5% — the framework refactor may not tax the fused batched
+  path.
 
 Usage::
 
@@ -35,7 +40,7 @@ import time
 import numpy as np
 
 from repro.core import (ClusterState, Job, JobKind, RSCH, RSCHConfig,
-                        Strategy)
+                        Strategy, default_profiles)
 from repro.core.snapshot import FullSnapshotter
 from repro.core.topology import ClusterTopology
 
@@ -58,15 +63,16 @@ def make_state(n_nodes: int, seed: int = 0) -> ClusterState:
     return state
 
 
-def bench_one(state: ClusterState, batched: bool, repeats: int
-              ) -> tuple[float, list[list[int]]]:
+def bench_one(state: ClusterState, batched: bool, repeats: int,
+              profiles=None) -> tuple[float, list[list[int]]]:
     """Best-of-N per-cycle latency (s) and the node picks of each cycle.
 
     Minimum over repeats is the standard noise-robust estimator for a
     deterministic microbenchmark."""
     rsch = RSCH(state.topology,
                 RSCHConfig(train_strategy=Strategy.E_BINPACK,
-                           batched_gang=batched))
+                           batched_gang=batched),
+                profiles=profiles)
     snap = FullSnapshotter().take(state)
     job = Job(uid=1, tenant="bench", gpu_type=0, n_pods=GANG_PODS,
               gpus_per_pod=GPUS_PER_POD, kind=JobKind.TRAIN)
@@ -77,8 +83,37 @@ def bench_one(state: ClusterState, batched: bool, repeats: int
         result = rsch.schedule(job, snap)
         times.append(time.perf_counter() - t0)
         assert result.placement is not None, "bench job must be placeable"
-        picks.append([p.node for p in result.placement.pods])
+        picks.append([(p.node, p.gpu_indices, p.nic)
+                      for p in result.placement.pods])
     return float(np.min(times)), picks
+
+
+def bench_pair(state: ClusterState, repeats: int
+               ) -> tuple[float, float, list]:
+    """Interleaved best-of-N timing: legacy-shim RSCH vs explicit
+    default profiles, alternating per iteration so load drift hits both
+    equally.  Returns (t_legacy, t_profiles, profile picks)."""
+    snap = FullSnapshotter().take(state)
+    job = Job(uid=1, tenant="bench", gpu_type=0, n_pods=GANG_PODS,
+              gpus_per_pod=GPUS_PER_POD, kind=JobKind.TRAIN)
+    legacy = RSCH(state.topology,
+                  RSCHConfig(train_strategy=Strategy.E_BINPACK))
+    explicit = RSCH(state.topology,
+                    RSCHConfig(train_strategy=Strategy.E_BINPACK),
+                    profiles=default_profiles())
+    legacy.schedule(job, snap)                    # warm caches
+    explicit.schedule(job, snap)
+    t_leg, t_prof, picks = [], [], []
+    for _ in range(repeats * 2):
+        t0 = time.perf_counter()
+        legacy.schedule(job, snap)
+        t_leg.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        result = explicit.schedule(job, snap)
+        t_prof.append(time.perf_counter() - t0)
+        picks.append([(p.node, p.gpu_indices, p.nic)
+                      for p in result.placement.pods])
+    return float(np.min(t_leg)), float(np.min(t_prof)), picks
 
 
 def main(smoke: bool = False) -> dict:
@@ -93,12 +128,28 @@ def main(smoke: bool = False) -> dict:
         t_bat, picks_bat = bench_one(state, batched=True, repeats=repeats)
         assert picks_seq == picks_bat, (
             f"batched placement diverged from sequential at {n} nodes")
+        # Plugin-framework parity (acceptance gate of the api_redesign):
+        # explicit default profiles vs the legacy shim — byte-identical
+        # placements, per-cycle time within 5% of the batched path.
+        # The two paths are timed interleaved so machine-load drift
+        # between separate loops cannot fake an overhead.
+        t_bat2, t_prof, picks_prof = bench_pair(state, repeats)
+        assert all(p == picks_bat[0] for p in picks_prof), (
+            f"profile-built RSCH diverged from the legacy shim at {n} "
+            f"nodes")
+        overhead = t_prof / t_bat2 - 1.0
         speedup = t_seq / t_bat
         rows[n] = {"sequential_s": t_seq, "batched_s": t_bat,
+                   "profile_s": t_prof, "profile_overhead": overhead,
                    "speedup": speedup,
                    "placements_per_s": GANG_PODS / t_bat}
         print(f"{n:7d} {t_seq * 1e3:10.2f}ms {t_bat * 1e3:10.2f}ms "
-              f"{speedup:7.1f}x {GANG_PODS / t_bat:15.0f}/s")
+              f"{speedup:7.1f}x {GANG_PODS / t_bat:15.0f}/s"
+              f"   profiles {t_prof * 1e3:.2f}ms ({overhead:+.1%})")
+        if n <= 10_000:
+            assert t_prof <= t_bat2 * 1.05, (
+                f"profile engine must stay within 5% of the batched "
+                f"path at {n} nodes, got {overhead:+.1%}")
     bar = rows.get(10_000)
     if bar is not None:
         assert bar["speedup"] >= 5.0, (

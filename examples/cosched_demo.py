@@ -25,8 +25,9 @@ import os
 
 import numpy as np
 
-from repro.core import (ClusterState, Job, JobKind, RSCH, RSCHConfig,
-                        Strategy)
+from repro.core import (ClusterState, Job, JobKind, RSCH, ProfileSet)
+from repro.core.framework import (ebinpack_pass, make_profile,
+                                  single_pass_plan, spread_pass)
 from repro.core.snapshot import FullSnapshotter
 from repro.core.topology import ClusterTopology
 from repro.launch.cosched import (estimated_step_time, job_mesh_shape,
@@ -50,15 +51,26 @@ def load_terms():
              "collective": r["collective_term_s"]}, os.path.basename(hits[0]))
 
 
+def uniform_profiles(name: str, pass_) -> ProfileSet:
+    """One placement pass for every workload class (framework API)."""
+    p = make_profile(name, single_pass_plan(pass_))
+    return ProfileSet(train=p, inference=p, best_effort=p)
+
+
+SPREAD_PROFILES = uniform_profiles("bg-spread", spread_pass())
+EBINPACK_PROFILES = uniform_profiles("bg-e-binpack",
+                                     ebinpack_pass(colocate=2.0))
+
+
 def fragment(state: ClusterState, topo: ClusterTopology,
-             rng: np.random.Generator, strategy: Strategy,
+             rng: np.random.Generator, profiles: ProfileSet,
              n_jobs: int = 48) -> None:
-    """Place small background jobs with the strategy under test.
+    """Place small background jobs with the profile under test.
 
     Spread scatters them across every LeafGroup; E-Binpack consolidates
     them into few groups, *reserving whole groups* for the large job that
     arrives next (§3.3.3 LeafGroup-level E-Binpack)."""
-    rsch = RSCH(topo, RSCHConfig(train_strategy=strategy))
+    rsch = RSCH(topo, profiles=profiles)
     for uid in range(10_000, 10_000 + n_jobs):
         j = Job(uid=uid, tenant="bg", gpu_type=0, n_pods=1,
                 gpus_per_pod=int(rng.choice([2, 4])), kind=JobKind.TRAIN,
@@ -68,18 +80,19 @@ def fragment(state: ClusterState, topo: ClusterTopology,
             state.allocate(j, res.placement)
 
 
-def place_and_price(bg_strategy: Strategy, topo, terms, seed: int = 3):
-    """Fill the cluster with small jobs under ``bg_strategy``, then place
+def place_and_price(bg_name: str, bg_profiles: ProfileSet, topo, terms,
+                    seed: int = 3):
+    """Fill the cluster with small jobs under ``bg_profiles``, then place
     one 64-GPU gang training job and price its placement."""
     state = ClusterState.create(topo)
-    fragment(state, topo, np.random.default_rng(seed), bg_strategy)
+    fragment(state, topo, np.random.default_rng(seed), bg_profiles)
     job = Job(uid=1, tenant="llm", gpu_type=0, n_pods=8, gpus_per_pod=8,
               kind=JobKind.TRAIN, gang=True, submit_time=0.0,
               duration=3600.0)
-    rsch = RSCH(topo, RSCHConfig(train_strategy=Strategy.E_BINPACK))
+    rsch = RSCH(topo, profiles=EBINPACK_PROFILES)
     res = rsch.schedule(job, FullSnapshotter().take(state))
     if res.placement is None:
-        print(f"  bg={bg_strategy.name:10s}: 64-GPU job does not fit "
+        print(f"  bg={bg_name:10s}: 64-GPU job does not fit "
               f"({res.reason})")
         return None
     q = placement_quality(res.placement, topo, job.n_gpus)
@@ -87,7 +100,7 @@ def place_and_price(bg_strategy: Strategy, topo, terms, seed: int = 3):
     from repro.launch.cosched import effective_collective_bw
     from repro.launch.mesh import ICI_BW
     coll = terms["collective"] * ICI_BW / effective_collective_bw(q)
-    print(f"  bg={bg_strategy.name:10s}: nodes={q.n_nodes} "
+    print(f"  bg={bg_name:10s}: nodes={q.n_nodes} "
           f"groups={q.n_groups} node_dev={q.node_dev:.2f} "
           f"group_dev={q.group_dev:.2f} "
           f"cross_group={q.cross_group_fraction:.2f} "
@@ -109,8 +122,8 @@ def main():
     print("one 64-GPU (8 pods x 8) gang training job arriving on a "
           "512-GPU cluster\nalready running 48 small jobs placed with the "
           "strategy under test:")
-    r_spread = place_and_price(Strategy.SPREAD, topo, terms)
-    r_ebp = place_and_price(Strategy.E_BINPACK, topo, terms)
+    r_spread = place_and_price("SPREAD", SPREAD_PROFILES, topo, terms)
+    r_ebp = place_and_price("E_BINPACK", EBINPACK_PROFILES, topo, terms)
 
     if r_spread and r_ebp:
         (t_s, c_s), (t_e, c_e) = r_spread, r_ebp

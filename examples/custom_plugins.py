@@ -1,0 +1,177 @@
+"""Extending Kant without touching scheduler internals (framework demo).
+
+Three extensions, each a plugin dropped into a profile — no QSCH/RSCH
+changes (see ``docs/plugins.md`` for the contract):
+
+1. **GfrAwareScore** (contrib): multi-objective fragmentation-aware
+   scoring — prefer placements that *heal* fragmented nodes and avoid
+   fragmenting idle ones, at node AND NodeNetGroup granularity.  Added
+   to an HA-style Spread profile (spreading is inherently fragmenting)
+   it cuts mean GFR (§4.3) by >30% at unchanged SOR.
+2. **TenantSoftAffinity** (contrib): semantic soft affinity — pull each
+   tenant's pods toward NodeNetGroups the tenant already occupies.
+   Prints how many LeafGroups each tenant's pods span.
+3. A ~10-line custom Score plugin written inline (the docs' worked
+   example), registered and exercised through the same machinery.
+
+Usage::
+
+    PYTHONPATH=src python examples/custom_plugins.py
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (ClusterState, Job, JobKind, QSCH, QuotaManager,
+                        QuotaMode, RSCH, SimConfig, Simulator)
+from repro.core.framework import (BackfillPolicy, GfrAwareScore,
+                                  PlacementPass, ProfileSet, ScorePlugin,
+                                  SpreadScore, TenantSoftAffinity,
+                                  default_profiles, ebinpack_pass,
+                                  make_profile, register,
+                                  single_pass_plan, spread_pass)
+from repro.core.topology import ClusterTopology
+
+
+def topology():
+    return ClusterTopology(n_nodes=64, gpus_per_node=8, nodes_per_leaf=8,
+                           leaves_per_spine=4, spines_per_superspine=2,
+                           nodes_per_hbd=8, nvlink_island=8, numa_split=4)
+
+
+def fragmenting_trace(n=260, seed=5, rate_per_hour=300.0,
+                      mean_duration_s=1500.0,
+                      tenants=("ads", "search", "ranker")):
+    """Sub-node jobs that fragment nodes unless the scorer fights it.
+
+    The ~60% steady-state load leaves the scheduler real placement
+    freedom — a saturated cluster has none, and no Score plugin can
+    change forced placements.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(3600.0 / rate_per_hour, size=n))
+    jobs = []
+    for i in range(n):
+        gpus = int(rng.choice([1, 2, 3, 4, 6, 8],
+                              p=[.2, .22, .13, .25, .1, .1]))
+        jobs.append(Job(uid=i, tenant=tenants[i % len(tenants)],
+                        gpu_type=0, n_pods=1, gpus_per_pod=gpus,
+                        kind=JobKind.TRAIN,
+                        submit_time=float(arrivals[i]),
+                        duration=float(
+                            rng.exponential(mean_duration_s) + 300.0)))
+    return jobs
+
+
+def run(profiles: ProfileSet, jobs):
+    topo = topology()
+    state = ClusterState.create(topo)
+    qm = QuotaManager({t: {0: 10**6} for t in ("ads", "search", "ranker")},
+                      mode=QuotaMode.SHARED)
+    qsch = QSCH(qm, RSCH(topo, profiles=profiles),
+                queue_policy=BackfillPolicy(head_timeout=900.0))
+    sim = Simulator(state, qsch, SimConfig(tick_interval=30.0,
+                                           sample_interval=120.0))
+    result = sim.run([Job(uid=j.uid, tenant=j.tenant, gpu_type=j.gpu_type,
+                          n_pods=j.n_pods, gpus_per_pod=j.gpus_per_pod,
+                          kind=j.kind, submit_time=j.submit_time,
+                          duration=j.duration) for j in jobs])
+    return topo, result
+
+
+# The docs' worked example: a complete custom Score plugin in ~10
+# lines.  Registered at module scope — the registry rejects duplicate
+# names, so re-running main() must not re-register.
+@register
+class RackFirstScore(ScorePlugin):
+    """Prefer low node indices ('near the rack door')."""
+
+    name = "RackFirstScore"
+
+    def __init__(self, weight=0.01):
+        self.weight = weight
+
+    def score(self, job, snap, pool, ctx):
+        n = snap.free_gpus.shape[0]
+        return self.weight * np.linspace(1.0, 0.0, n, dtype=np.float32)
+
+
+def tenant_group_spans(topo, result):
+    spans = {}
+    for j in result.jobs:
+        if j.placement is None:
+            continue
+        spans.setdefault(j.tenant, set()).update(
+            int(topo.leaf_id[p.node]) for p in j.placement.pods)
+    return {t: len(g) for t, g in sorted(spans.items())}
+
+
+def main():
+    jobs = fragmenting_trace()
+
+    print("== 1. GFR-aware fragmentation scoring " + "=" * 26)
+    topo = topology()
+    default = default_profiles()
+
+    def uniform(name, pass_):
+        p = make_profile(name, single_pass_plan(pass_))
+        return ProfileSet(train=p, inference=p, best_effort=p)
+
+    # An HA-flavored cluster spreads every pod -> fragments every node.
+    # The GFR objective rides along as one extra Score plugin.
+    spread_only = uniform("ha-spread", spread_pass())
+    spread_gfr = uniform("ha-spread-gfr", PlacementPass(
+        scorers=(SpreadScore(),
+                 GfrAwareScore(weight=0.5, topology=topo)),
+        spread=True))
+    _, base = run(spread_only, jobs)
+    _, plug = run(spread_gfr, jobs)
+    g0 = base.metrics.mean_gfr()
+    g1 = plug.metrics.mean_gfr()
+    print(f"  HA Spread           mean GFR {g0:.3f}  "
+          f"SOR {base.metrics.sor():.3f}")
+    print(f"  + GfrAwareScore     mean GFR {g1:.3f}  "
+          f"SOR {plug.metrics.sor():.3f}")
+    print(f"  fragmentation delta: {(g0 - g1) / max(g0, 1e-9) * 100:+.1f}%"
+          f"  (spread HA semantics kept)")
+    assert g1 < g0
+
+    print("\n== 2. Tenant soft affinity " + "=" * 37)
+    affinity = ProfileSet(
+        train=make_profile("train-affinity", single_pass_plan(
+            ebinpack_pass(colocate=2.0, extra_scorers=(
+                TenantSoftAffinity(topo, weight=0.6, anti_weight=0.3),)))),
+        inference=default.inference,
+        best_effort=default.best_effort,
+    )
+    _, ebp = run(default_profiles(), jobs)
+    _, aff = run(affinity, jobs)
+    span_base = tenant_group_spans(topo, ebp)
+    span_aff = tenant_group_spans(topo, aff)
+    print(f"  LeafGroups spanned per tenant (E-Binpack): {span_base}")
+    print(f"  LeafGroups spanned per tenant (affinity):  {span_aff}")
+    assert sum(span_aff.values()) < sum(span_base.values()), \
+        "soft affinity should consolidate each tenant into fewer groups"
+
+    print("\n== 3. Write your own Score plugin (10 lines) " + "=" * 19)
+    custom = ProfileSet(
+        train=make_profile("train-rack-first", single_pass_plan(
+            PlacementPass(scorers=(RackFirstScore(weight=5.0),)))),
+        inference=make_profile("i", single_pass_plan(spread_pass())),
+        best_effort=make_profile("b", single_pass_plan(spread_pass())),
+    )
+    state = ClusterState.create(topo)
+    from repro.core.snapshot import FullSnapshotter
+    rsch = RSCH(topo, profiles=custom)
+    job = Job(uid=1, tenant="ads", gpu_type=0, n_pods=4, gpus_per_pod=8,
+              kind=JobKind.TRAIN)
+    res = rsch.schedule(job, FullSnapshotter().take(state))
+    nodes = [p.node for p in res.placement.pods]
+    print(f"  RackFirstScore placed the 4-pod gang on nodes {nodes}")
+    assert max(nodes) <= 3
+    print("custom_plugins complete")
+
+
+if __name__ == "__main__":
+    main()

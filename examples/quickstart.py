@@ -3,9 +3,11 @@
 Runs in ~30 s on CPU and tours the public API end to end:
 
 1. build a 256-GPU cluster (leaf/spine topology, 8-GPU nodes);
-2. schedule a mixed training trace with Kant (Backfill + E-Binpack) and
-   with the Strict-FIFO/plain-Binpack baseline;
-3. print the paper's five metrics (GAR, SOR, GFR, JWTD, JTTED) for both;
+2. assemble scheduling profiles from the plugin framework
+   (``repro.core.framework``, see docs/plugins.md) — Kant's defaults
+   (Backfill + E-Binpack) vs a Strict-FIFO/plain-Binpack baseline;
+3. schedule a mixed training trace with both and print the paper's five
+   metrics (GAR, SOR, GFR, JWTD, JTTED);
 4. run a few training steps of a reduced ("smoke") model — the same model
    zoo the production dry-run lowers onto the 256/512-chip meshes.
 
@@ -18,21 +20,34 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import (ClusterState, QSCH, QSCHConfig, QueuePolicy,
-                        QuotaManager, QuotaMode, RSCH, RSCHConfig,
-                        SimConfig, Simulator, Strategy, training_trace)
+from repro.core import (ClusterState, QSCH, QuotaManager, QuotaMode, RSCH,
+                        SimConfig, Simulator, training_trace)
+from repro.core.framework import (BackfillPolicy, ProfileSet,
+                                  StrictFIFOPolicy, binpack_pass,
+                                  default_profiles, make_profile,
+                                  single_pass_plan)
 from repro.core.topology import ClusterTopology
 
+# The baseline scheduler as explicit profiles: plain node-level Binpack
+# for every workload class, Strict-FIFO queue.  Kant's defaults come
+# from default_profiles(): E-Binpack training, E-Spread inference.
+BASELINE_PROFILES = ProfileSet(
+    train=make_profile("train-binpack", single_pass_plan(binpack_pass())),
+    inference=make_profile("infer-binpack",
+                           single_pass_plan(binpack_pass())),
+    best_effort=make_profile("dev-binpack",
+                             single_pass_plan(binpack_pass())),
+)
 
-def schedule(policy: QueuePolicy, strategy: Strategy, jobs):
+
+def schedule(queue_policy, profiles: ProfileSet, jobs):
     topo = ClusterTopology(n_nodes=32, gpus_per_node=8, nodes_per_leaf=8,
                            leaves_per_spine=2, spines_per_superspine=2,
                            nodes_per_hbd=8, nvlink_island=8, numa_split=4)
     state = ClusterState.create(topo)
     qm = QuotaManager({"team-a": {0: 10**6}}, mode=QuotaMode.SHARED)
-    rsch = RSCH(topo, RSCHConfig(train_strategy=strategy))
-    qsch = QSCH(qm, rsch, QSCHConfig(policy=policy,
-                                     backfill_head_timeout=600.0))
+    rsch = RSCH(topo, profiles=profiles)
+    qsch = QSCH(qm, rsch, queue_policy=queue_policy)
     sim = Simulator(state, qsch, SimConfig(tick_interval=30.0,
                                            sample_interval=120.0))
     return sim.run(jobs)
@@ -52,8 +67,9 @@ def main():
                                       arrival_rate_per_hour=500.0,
                                       mean_duration_s=1800.0)
             if j.n_gpus <= 64]
-    base = schedule(QueuePolicy.STRICT_FIFO, Strategy.BINPACK, list(jobs))
-    kant = schedule(QueuePolicy.BACKFILL, Strategy.E_BINPACK, list(jobs))
+    base = schedule(StrictFIFOPolicy(), BASELINE_PROFILES, list(jobs))
+    kant = schedule(BackfillPolicy(head_timeout=600.0),
+                    default_profiles(), list(jobs))
     show("Strict FIFO + Binpack", base)
     rep = show("Kant (Backfill + E-Binpack)", kant)
     if rep["jtted"]:

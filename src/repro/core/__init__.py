@@ -1,14 +1,16 @@
-"""Kant's core: cluster model, QSCH, RSCH, metrics, simulator."""
+"""Kant's core: cluster model, QSCH, RSCH, plugin framework, simulator."""
 
 from .cluster import ClusterState
+from .framework import (CycleResult, PlacementPass, ProfileSet,
+                        SchedulingProfile, default_profiles)
 from .job import (Job, JobKind, JobState, Placement, PodPlacement,
                   PRIO_HIGH, PRIO_LOW, PRIO_NORMAL, size_bucket)
 from .metrics import MetricsRecorder
 from .qsch import QSCH, QSCHConfig, QueuePolicy
 from .quota import QuotaManager, QuotaMode
-from .rsch import RSCH, RSCHConfig, Strategy
+from .rsch import RSCH, RSCHConfig, Strategy, profiles_from_config
 from .scoring import (BINPACK, E_BINPACK, E_SPREAD, SPREAD, ScoreWeights,
-                      compute_node_scores, node_scores_np,
+                      combine_weights, compute_node_scores, node_scores_np,
                       select_gang_slots)
 from .simulator import SimConfig, Simulator, SimResult
 from .snapshot import (FullSnapshotter, IncrementalSnapshotter, Snapshot,
@@ -22,10 +24,13 @@ __all__ = [
     "PodPlacement", "PRIO_HIGH", "PRIO_LOW", "PRIO_NORMAL", "size_bucket",
     "MetricsRecorder", "QSCH", "QSCHConfig", "QueuePolicy", "QuotaManager",
     "QuotaMode", "RSCH", "RSCHConfig", "Strategy", "BINPACK", "E_BINPACK",
-    "E_SPREAD", "SPREAD", "ScoreWeights", "compute_node_scores",
-    "node_scores_np", "select_gang_slots", "SimConfig",
-    "Simulator", "SimResult", "FullSnapshotter", "IncrementalSnapshotter",
-    "Snapshot", "snapshots_equal", "ClusterTopology", "small_topology",
-    "training_cluster_topology", "inference_trace", "trace_stats",
-    "training_trace",
+    "E_SPREAD", "SPREAD", "ScoreWeights", "combine_weights",
+    "compute_node_scores", "node_scores_np", "select_gang_slots",
+    "SimConfig", "Simulator", "SimResult", "FullSnapshotter",
+    "IncrementalSnapshotter", "Snapshot", "snapshots_equal",
+    "ClusterTopology", "small_topology", "training_cluster_topology",
+    "inference_trace", "trace_stats", "training_trace",
+    # framework (full surface in repro.core.framework)
+    "CycleResult", "PlacementPass", "ProfileSet", "SchedulingProfile",
+    "default_profiles", "profiles_from_config",
 ]

@@ -1,0 +1,325 @@
+"""Extension-point plugin API (the framework's contract).
+
+The scheduling pipeline exposes one extension point per decision the
+paper's QSCH/RSCH make; a plugin implements exactly one point:
+
+==============  ======================================================
+QueueSort       ordering of the global pending queue (§3.2.2)
+Admit           static (quota, §3.2.1) and dynamic (feasibility)
+                admission; ``stage`` selects when the plugin runs
+Filter          vectorized node filtering: a boolean mask over the
+                snapshot's node table (§3.4.1 node pools)
+Score           vectorized node scoring: either *fused weights* into
+                the shared filter+score kernel pass, an additive float
+                term over the node table, or a pod-dependent
+                per-extra-pod bonus (§3.3.3/§3.3.4)
+Reserve/Permit  transactional gang commit: Reserve claims bookkeeping
+                (quota), Permit may veto; any failure rolls back
+                every successful Reserve (§3.3.2 all-or-nothing)
+PostBind        fire-and-forget hook after a placement is bound
+Preempt         victim selection for the conservative preemption
+                engine (§3.2.3)
+QueuePolicy     the cycle body: Strict FIFO / Best-Effort / Backfill
+                (Table 1)
+==============  ======================================================
+
+**Score plugin contract** — every Score plugin declares whether its term
+is *snapshot-static* (depends only on the snapshot, not on pods of the
+job placed earlier in the same gang) or *pod-dependent*:
+
+* snapshot-static terms either return :class:`ScoreWeights` from
+  :meth:`ScorePlugin.fused_weights` (combined into ONE fused
+  filter+score pass so the numpy/jnp/Pallas backends and the batched
+  slot-chain gang selection are preserved) or a float array from
+  :meth:`ScorePlugin.score` that is added onto the fused result;
+* pod-dependent terms (``pod_dependent = True``) contribute a scalar
+  per-extra-pod bonus via :meth:`ScorePlugin.per_pod_bonus`, folded
+  into the per-node slot chains of
+  :func:`repro.core.scoring.select_gang_slots` — the only
+  pod-dependence the exact batched emulation supports is this linear
+  same-node bonus (what ColocateBonus needs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import (TYPE_CHECKING, Callable, ClassVar, List, Mapping,
+                    Optional, Sequence, Tuple)
+
+import numpy as np
+
+from ..job import Job, JobKind, Placement
+from ..scoring import ScoreWeights
+from ..snapshot import Snapshot
+
+if TYPE_CHECKING:  # avoid import cycles: qsch/rsch import this module
+    from ..cluster import ClusterState
+    from ..qsch import QSCH
+    from ..quota import QuotaManager
+    from ..rsch import RSCH
+
+
+class Plugin:
+    """Base for every extension-point plugin.
+
+    ``name`` is the registry key (see
+    :mod:`repro.core.framework.registry`); instances may carry
+    constructor parameters (weights, timeouts, ...).
+    """
+
+    name: ClassVar[str] = "plugin"
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} {self.name!r}>"
+
+
+# ----------------------------------------------------------------------
+# Contexts
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class SchedulingContext:
+    """What a placement computation may consult beyond the snapshot.
+
+    RSCH stays pure — plugins read this context, they never mutate
+    cluster state through it.  ``running`` maps job uid -> running Job
+    (used e.g. by tenant-affinity scoring); standalone callers of
+    ``RSCH.schedule`` can pass their own.
+    """
+
+    running: Mapping[int, Job] = dataclasses.field(default_factory=dict)
+    quota: Optional["QuotaManager"] = None
+
+
+@dataclasses.dataclass
+class CycleResult:
+    """Outcome of one QSCH scheduling cycle (returned by ``cycle``)."""
+
+    scheduled: List[Job] = dataclasses.field(default_factory=list)
+    preempted: List[Job] = dataclasses.field(default_factory=list)
+    blocked_head: Optional[Job] = None
+    snapshot_version: int = 0
+    # Why jobs waited (policy-experiment accounting): jobs excluded from
+    # the global pass by static admission this cycle, dynamic-admission
+    # failures during placement attempts, and requeue events (placement
+    # failures + preemptions, §3.2.4).
+    admit_rejected: int = 0
+    infeasible: int = 0
+    requeues: int = 0
+
+
+@dataclasses.dataclass
+class CycleContext(SchedulingContext):
+    """Per-cycle context handed to queue-policy/admit/preempt plugins.
+
+    ``sched`` is the QSCH orchestrator; plugins drive placements through
+    its public helpers (``try_place``, ``preempt_job``,
+    ``dynamic_admit``) so gang commit, snapshot deltas and accounting
+    stay in one place.
+    """
+
+    sched: Optional["QSCH"] = None
+    rsch: Optional["RSCH"] = None
+    state: Optional["ClusterState"] = None
+    snap: Optional[Snapshot] = None
+    now: float = 0.0
+    result: CycleResult = dataclasses.field(default_factory=CycleResult)
+
+
+# ----------------------------------------------------------------------
+# Extension points
+# ----------------------------------------------------------------------
+class QueueSortPlugin(Plugin):
+    """Orders the pending queue; lower keys schedule first (§3.2.2)."""
+
+    def key(self, job: Job) -> Tuple:
+        raise NotImplementedError
+
+
+class AdmitPlugin(Plugin):
+    """Admission control.  ``stage`` is ``"static"`` (runs when the
+    global queue is built and re-checked before every placement,
+    §3.2.1) or ``"dynamic"`` (runs against the working snapshot)."""
+
+    stage: ClassVar[str] = "static"
+
+    def admit(self, job: Job, ctx: CycleContext) -> bool:
+        raise NotImplementedError
+
+
+class FilterPlugin(Plugin):
+    """Vectorized node filter: returns a boolean mask over the node
+    table.  ``zone`` is the pass's zone selector (``None`` / ``"zone"``
+    / ``"general"``); most filters ignore it."""
+
+    def mask(self, job: Job, snap: Snapshot,
+             zone: Optional[str]) -> np.ndarray:
+        raise NotImplementedError
+
+
+class ScorePlugin(Plugin):
+    """Vectorized node scoring term (see module docstring contract)."""
+
+    #: snapshot-static (False) vs pod-dependent (True) declaration.
+    pod_dependent: ClassVar[bool] = False
+
+    def fused_weights(self, job: Job) -> Optional[ScoreWeights]:
+        """Weights folded into the single fused filter+score pass
+        (numpy / jnp / Pallas).  Return ``None`` if this plugin scores
+        via :meth:`score` instead."""
+        return None
+
+    def score(self, job: Job, snap: Snapshot, pool: np.ndarray,
+              ctx: Optional[SchedulingContext]) -> Optional[np.ndarray]:
+        """Additive snapshot-static term over the node table (float
+        array, shape ``(n_nodes,)``); added where the fused pass kept
+        the node valid.  Return ``None`` to contribute nothing."""
+        return None
+
+    def group_score(self, job: Job, snap: Snapshot, pool: np.ndarray,
+                    ctx: Optional[SchedulingContext]
+                    ) -> Optional[np.ndarray]:
+        """Additive term over the NodeNetGroup table (shape
+        ``(n_leaf_groups,)``): biases Level-1 group preselection
+        (§3.4.2), the group-granular twin of :meth:`score` — without it
+        a group-constant node term can never steer single-group jobs,
+        whose group is fixed before node scoring runs.  Aggregate only
+        over ``pool`` nodes: the preselection never places outside the
+        pass's Filter mask, so out-of-pool nodes must not earn a group
+        its rank.  Higher wins; ties fall back to the pass's default
+        group ranking.  Return ``None`` (the default) to leave
+        preselection untouched."""
+        return None
+
+    def per_pod_bonus(self, job: Job) -> float:
+        """Pod-dependent plugins only: bonus a node earns per pod of
+        this job already placed on it (folded into the slot chains)."""
+        return 0.0
+
+
+class ReservePlugin(Plugin):
+    """Claims bookkeeping for a computed placement before binding.
+    Must be undoable: ``unreserve`` is called on every successfully
+    reserved plugin if a later Reserve/Permit fails (§3.3.2)."""
+
+    def reserve(self, job: Job, placement: Placement,
+                ctx: CycleContext) -> bool:
+        return True
+
+    def unreserve(self, job: Job, placement: Placement,
+                  ctx: CycleContext) -> None:
+        pass
+
+
+class PermitPlugin(Plugin):
+    """Last gate before binding; a veto rolls back all reservations."""
+
+    def permit(self, job: Job, placement: Placement,
+               ctx: CycleContext) -> bool:
+        return True
+
+
+class PostBindPlugin(Plugin):
+    """Runs after a placement is committed (informational)."""
+
+    def post_bind(self, job: Job, placement: Placement,
+                  ctx: CycleContext) -> None:
+        pass
+
+
+class PreemptPlugin(Plugin):
+    """Victim selection for the conservative preemption engine
+    (§3.2.3).  The orchestrator consults the profile's chain in order
+    and runs its shared dry-run-checked eviction loop on the first
+    non-empty victim list.  A plugin may instead override
+    :meth:`execute` to own its whole preemption flow — eviction AND
+    placement, via ``ctx.sched.preempt_job``/``try_place`` (Backfill
+    head-timeout does this): the chain calls ``execute`` on every
+    plugin whose ``victims`` came back empty and stops once the job is
+    running."""
+
+    def victims(self, job: Job, ctx: CycleContext) -> List[Job]:
+        return []
+
+    def execute(self, job: Job, ctx: CycleContext) -> None:
+        """Full preemption flow for policies that are not driven by the
+        shared chain loop (default: no-op)."""
+
+
+class QueuePolicyPlugin(Plugin):
+    """The cycle body (Table 1): walks the admitted global queue and
+    drives placements via ``ctx.sched.try_place``."""
+
+    def run_cycle(self, queue: List[Job], ctx: CycleContext) -> None:
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------------
+# Profiles
+# ----------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PlacementPass:
+    """One Filter+Score placement attempt over a node-pool restriction.
+
+    ``spread``/``enhanced`` steer the Level-1 NodeNetGroup preselection
+    (§3.4.2): spread prefers the emptiest group, enhanced reserves
+    empty groups for large jobs (LeafGroup E-Binpack, §3.3.3); ``zone``
+    restricts to the inference dedicated zone or its complement
+    (§3.3.4).
+    """
+
+    scorers: Tuple[ScorePlugin, ...]
+    spread: bool = False
+    enhanced: bool = False
+    zone: Optional[str] = None
+
+
+#: Plan: ordered placement passes for a job against a snapshot; the
+#: first pass that yields a placement wins.
+PlanFn = Callable[[Job, Snapshot], Sequence[PlacementPass]]
+
+
+def single_pass_plan(p: PlacementPass) -> PlanFn:
+    """Plan that always runs exactly one pass (the common case)."""
+    def plan(job: Job, snap: Snapshot) -> Sequence[PlacementPass]:
+        return (p,)
+    return plan
+
+
+@dataclasses.dataclass
+class SchedulingProfile:
+    """One plugin chain per extension point, for one workload class."""
+
+    name: str
+    plan: PlanFn
+    queue_sort: QueueSortPlugin
+    admit: Tuple[AdmitPlugin, ...] = ()
+    filters: Tuple[FilterPlugin, ...] = ()
+    reserve: Tuple[ReservePlugin, ...] = ()
+    permit: Tuple[PermitPlugin, ...] = ()
+    post_bind: Tuple[PostBindPlugin, ...] = ()
+    preempt: Tuple[PreemptPlugin, ...] = ()
+
+    def admit_chain(self, stage: str) -> Tuple[AdmitPlugin, ...]:
+        return tuple(p for p in self.admit if p.stage == stage)
+
+
+@dataclasses.dataclass
+class ProfileSet:
+    """Per-workload profiles (§2 diverse task types) + the shared queue
+    policy.  Like kube-scheduler profiles, the queue is global: the
+    ``train`` profile's QueueSort orders it for every workload."""
+
+    train: SchedulingProfile
+    inference: SchedulingProfile
+    best_effort: SchedulingProfile
+
+    def for_job(self, job: Job) -> SchedulingProfile:
+        if job.kind is JobKind.INFER:
+            return self.inference
+        if job.kind is JobKind.DEBUG:
+            return self.best_effort
+        return self.train
+
+    @property
+    def queue_sort(self) -> QueueSortPlugin:
+        return self.train.queue_sort

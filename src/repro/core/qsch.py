@@ -1,43 +1,56 @@
-"""QSCH — the Queue-based Scheduler (paper §3.2).
+"""QSCH — the Queue-based Scheduler (paper §3.2), as a thin cycle
+orchestrator over the framework's plugin chains.
 
-QSCH owns everything that happens to a job *before* RSCH places it:
+QSCH owns everything that happens to a job *before* RSCH places it, but
+every policy decision is a plugin (see :mod:`repro.core.framework`):
 
-* per-tenant queues with the paper's ordering (priority desc, submit time,
-  job size as tiebreaker) (§3.2.2);
-* two-tier admission: static quota admission then dynamic resource
-  admission (§3.2.1), at job level for gang jobs, pod level otherwise;
-* queueing policies (Table 1): Strict FIFO, Best-Effort FIFO, Backfill
-  (with head-timeout preemption of backfilled jobs);
-* preemption control (§3.2.3): priority preemption, quota-reclamation
-  preemption, backfill preemption — all deliberately conservative: a
+* per-tenant queues ordered by the **QueueSort** plugin (§3.2.2);
+* two-tier admission via **Admit** plugins: static quota admission then
+  dynamic resource admission (§3.2.1);
+* the cycle body is a **QueuePolicy** plugin (Table 1): Strict FIFO,
+  Best-Effort FIFO, Backfill (with head-timeout preemption via the
+  BackfillHeadTimeout Preempt plugin);
+* preemption control (§3.2.3) runs the profile's **Preempt** chain
+  (priority, quota-reclamation) through one conservative engine: a
   preemption fires only when the dry-run accounting shows it actually
   unblocks the beneficiary;
-* requeueing (§3.2.4): placement failures and preemptions return the job
-  to its tenant queue instead of deadlocking the pipeline.
+* the gang commit is transactional via **Reserve/Permit** plugins
+  (quota charge with rollback), followed by the **PostBind** chain;
+* requeueing (§3.2.4): placement failures and preemptions return the
+  job to its tenant queue instead of deadlocking the pipeline.
 
 Snapshot discipline (§3.4.3): one ``snapshotter.take`` per cycle.  Every
 mid-cycle mutation (placement commit, preemption release) is mirrored
 onto the working snapshot via :meth:`Snapshot.apply_placement` /
 :meth:`Snapshot.apply_release` deltas instead of re-copying the cluster,
 which is what made large-gang cycles O(placements × nodes).
+
+``QSCHConfig(policy=...)`` remains as a deprecation shim mapping the
+legacy :class:`QueuePolicy` enum onto the built-in QueuePolicy plugins;
+pass ``queue_policy=`` for direct plugin control.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import Dict, List, Optional
 
 from .cluster import ClusterState
-from .job import Job, JobKind, JobState
-from .quota import QuotaManager, QuotaMode
-from .rsch import RSCH, ScheduleResult
-from .snapshot import FullSnapshotter, IncrementalSnapshotter, Snapshot
+from .framework.api import CycleContext, CycleResult
+from .framework.builtin import (BackfillHeadTimeout, BackfillPolicy,
+                                BestEffortFIFOPolicy, StrictFIFOPolicy)
+from .job import Job, JobState
+from .quota import QuotaManager
+from .rsch import RSCH
+from .snapshot import FullSnapshotter, IncrementalSnapshotter
+
+__all__ = ["QSCH", "QSCHConfig", "QueuePolicy", "CycleResult"]
 
 
 class QueuePolicy(enum.Enum):
+    """Legacy queue-policy names (shim over the QueuePolicy plugins)."""
+
     STRICT_FIFO = "strict-fifo"
     BEST_EFFORT_FIFO = "best-effort-fifo"
     BACKFILL = "backfill"
@@ -49,36 +62,46 @@ class QSCHConfig:
     # Backfill: head job older than this (seconds of queue wait while
     # blocked) may preempt backfilled jobs (Table 1).
     backfill_head_timeout: float = 1800.0
-    # Priority preemption (§3.2.3): enabled but conservative.
+    # Priority/quota-reclamation preemption (§3.2.3): enabled but
+    # conservative.  Gates the profile's Preempt chain.
     priority_preemption: bool = True
     # Upper bound on preemptions per cycle — keeps cascades in check
     # ("conservative preemption policy", §3.2.3).
     max_preemptions_per_cycle: int = 64
 
 
-@dataclasses.dataclass
-class CycleResult:
-    scheduled: List[Job] = dataclasses.field(default_factory=list)
-    preempted: List[Job] = dataclasses.field(default_factory=list)
-    blocked_head: Optional[Job] = None
-    snapshot_version: int = 0
+def _policy_from_config(config: QSCHConfig):
+    if config.policy is QueuePolicy.STRICT_FIFO:
+        return StrictFIFOPolicy()
+    if config.policy is QueuePolicy.BEST_EFFORT_FIFO:
+        return BestEffortFIFOPolicy()
+    return BackfillPolicy(head_timeout=config.backfill_head_timeout,
+                          preempt=BackfillHeadTimeout())
 
 
 class QSCH:
     def __init__(self, quota: QuotaManager, rsch: RSCH,
                  config: Optional[QSCHConfig] = None,
-                 incremental_snapshots: bool = True) -> None:
+                 incremental_snapshots: bool = True,
+                 queue_policy=None) -> None:
         self.quota = quota
         self.rsch = rsch
         self.config = config or QSCHConfig()
+        self.queue_policy = queue_policy or _policy_from_config(self.config)
         self.snapshotter = (IncrementalSnapshotter()
                             if incremental_snapshots else FullSnapshotter())
         # Tenant queues (§3.2.2): submission order is kept per tenant; the
-        # global pass merges by order_key.
+        # global pass merges by the QueueSort plugin's key.
         self.queues: Dict[str, List[Job]] = {}
         self.running: Dict[int, Job] = {}
         # Head-of-line blocking bookkeeping for Backfill.
-        self._head_blocked_since: Dict[int, float] = {}
+        self.head_blocked_since: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------
+    # Profiles
+    # ------------------------------------------------------------------
+    def profile_for(self, job: Job):
+        return self.rsch.profiles.for_job(job)
 
     # ------------------------------------------------------------------
     # Queue management
@@ -99,11 +122,15 @@ class QSCH:
         out: List[Job] = []
         for q in self.queues.values():
             out.extend(j for j in q if j.state is JobState.PENDING)
-        out.sort(key=Job.order_key)
+        out.sort(key=self.rsch.profiles.queue_sort.key)
         return out
 
     def queue_depth(self) -> int:
-        return len(self.pending_jobs())
+        """Pending-job count.  Plain sum over the tenant queues — this
+        runs every simulator tick via metrics sampling, so it must not
+        pay the full ``pending_jobs()`` merge-and-sort."""
+        return sum(1 for q in self.queues.values()
+                   for j in q if j.state is JobState.PENDING)
 
     def _remove_from_queue(self, job: Job) -> None:
         q = self.queues.get(job.tenant, [])
@@ -111,13 +138,15 @@ class QSCH:
             q.remove(job)
 
     # ------------------------------------------------------------------
-    # Admission (§3.2.1)
+    # Admission (§3.2.1): the profile's Admit chains
     # ------------------------------------------------------------------
-    def _static_admit(self, job: Job) -> bool:
-        return self.quota.can_admit(job)
+    def static_admit(self, job: Job, ctx: CycleContext) -> bool:
+        return all(p.admit(job, ctx)
+                   for p in self.profile_for(job).admit_chain("static"))
 
-    def _dynamic_admit(self, job: Job, snap: Snapshot) -> bool:
-        return self.rsch.feasible(job, snap)
+    def dynamic_admit(self, job: Job, ctx: CycleContext) -> bool:
+        return all(p.admit(job, ctx)
+                   for p in self.profile_for(job).admit_chain("dynamic"))
 
     # ------------------------------------------------------------------
     # One scheduling cycle
@@ -126,113 +155,91 @@ class QSCH:
         result = CycleResult()
         snap = self.snapshotter.take(state)
         result.snapshot_version = snap.version
+        ctx = CycleContext(running=self.running, quota=self.quota,
+                           sched=self, rsch=self.rsch, state=state,
+                           snap=snap, now=now, result=result)
         candidates = self.pending_jobs()
         # Jobs failing static quota stay in the tenant queue and never
         # enter the global pass (§3.2.2).
-        global_queue = [j for j in candidates if self._static_admit(j)]
+        global_queue = []
+        for job in candidates:
+            if self.static_admit(job, ctx):
+                global_queue.append(job)
+            else:
+                result.admit_rejected += 1
         if not global_queue:
             return result
 
-        policy = self.config.policy
-        if policy is QueuePolicy.STRICT_FIFO:
-            self._cycle_strict(global_queue, state, snap, now, result)
-        elif policy is QueuePolicy.BEST_EFFORT_FIFO:
-            self._cycle_best_effort(global_queue, state, snap, now, result)
-        else:
-            self._cycle_backfill(global_queue, state, snap, now, result)
+        self.queue_policy.run_cycle(global_queue, ctx)
 
-        # Priority preemption (§3.2.3): if the highest-priority pending job
-        # is still blocked, conservatively evict strictly-lower-priority
-        # preemptible work that provably unblocks it.
+        # Preempt chain (§3.2.3): if the highest-priority pending job is
+        # still blocked, conservatively evict work that provably
+        # unblocks it (priority first, then quota reclamation).
         if (self.config.priority_preemption and result.blocked_head
                 is not None):
-            self._try_priority_preemption(result.blocked_head, state, snap,
-                                          now, result)
+            self._run_preempt_chain(result.blocked_head, ctx)
         return result
 
-    # -- policy bodies --------------------------------------------------
-    def _cycle_strict(self, queue: List[Job], state: ClusterState,
-                      snap: Snapshot, now: float, result: CycleResult
-                      ) -> None:
-        """Table 1 Strict FIFO: one blocked head blocks everyone."""
-        for job in queue:
-            if not self._try_place(job, state, snap, now, result):
-                result.blocked_head = job
-                return
-
-    def _cycle_best_effort(self, queue: List[Job], state: ClusterState,
-                           snap: Snapshot, now: float, result: CycleResult
-                           ) -> None:
-        """Table 1 Best-Effort FIFO: skip unschedulable jobs.  No
-        preemption -> large jobs can starve (reproduced in Fig 4)."""
-        blocked: Optional[Job] = None
-        for job in queue:
-            if not self._try_place(job, state, snap, now, result) \
-                    and blocked is None:
-                blocked = job
-        # Note: deliberately do NOT set result.blocked_head -> no
-        # priority preemption assist; that is what distinguishes the
-        # policy in the paper's Fig 4 starvation result.
-
-    def _cycle_backfill(self, queue: List[Job], state: ClusterState,
-                        snap: Snapshot, now: float, result: CycleResult
-                        ) -> None:
-        """Table 1 Backfill: smaller jobs may run behind a blocked head;
-        after ``backfill_head_timeout`` the head preempts them."""
-        head = queue[0]
-        if self._try_place(head, state, snap, now, result):
-            self._head_blocked_since.pop(head.uid, None)
-            remaining = queue[1:]
-        else:
-            blocked_since = self._head_blocked_since.setdefault(
-                head.uid, now)
-            if now - blocked_since >= self.config.backfill_head_timeout:
-                self._backfill_preempt_for(head, state, snap, now, result)
-                if self._try_place(head, state, snap, now, result):
-                    self._head_blocked_since.pop(head.uid, None)
-                else:
-                    result.blocked_head = head
-            else:
-                result.blocked_head = head
-            remaining = queue[1:]
-        # Backfill pass: later jobs may use idle resources now.
-        for job in remaining:
-            if job.state is not JobState.PENDING:
-                continue
-            self._try_place(job, state, snap, now, result,
-                            backfilled=result.blocked_head is not None)
-
-    # -- placement ------------------------------------------------------
-    def _try_place(self, job: Job, state: ClusterState, snap: Snapshot,
-                   now: float, result: CycleResult,
-                   backfilled: bool = False) -> bool:
+    # ------------------------------------------------------------------
+    # Placement attempt: admission -> RSCH -> Reserve/Permit -> bind
+    # ------------------------------------------------------------------
+    def try_place(self, job: Job, ctx: CycleContext,
+                  backfilled: bool = False) -> bool:
+        result = ctx.result
         # Re-check static quota: earlier placements in this cycle may have
         # consumed it since the global-queue filter ran (§3.2.1).
-        if not self._static_admit(job):
+        if not self.static_admit(job, ctx):
+            result.admit_rejected += 1
             return False
-        if not self._dynamic_admit(job, snap):
+        if not self.dynamic_admit(job, ctx):
+            result.infeasible += 1
             return False
         job.state = JobState.ADMITTED
-        job.admit_time = now
-        sched = self.rsch.schedule(job, snap)
+        job.admit_time = ctx.now
+        sched = self.rsch.schedule(job, ctx.snap, ctx)
         if sched.placement is None:
             # Dynamic admission passed but placement failed (fragmentation
             # or topology): requeue mechanism (§3.2.4).
             self._remove_from_queue(job)
             self.requeue(job)
+            result.requeues += 1
             return False
-        self.quota.charge(job)
-        state.allocate(job, sched.placement)
+        profile = self.profile_for(job)
+        # Reserve/Permit (§3.3.2 transactional gang commit): every
+        # successful Reserve is rolled back if a later plugin fails.
+        reserved = []
+        ok = True
+        for plugin in profile.reserve:
+            if plugin.reserve(job, sched.placement, ctx):
+                reserved.append(plugin)
+            else:
+                ok = False
+                break
+        if ok:
+            for plugin in profile.permit:
+                if not plugin.permit(job, sched.placement, ctx):
+                    ok = False
+                    break
+        if not ok:
+            for plugin in reversed(reserved):
+                plugin.unreserve(job, sched.placement, ctx)
+            self._remove_from_queue(job)
+            self.requeue(job)
+            result.requeues += 1
+            return False
+        ctx.state.allocate(job, sched.placement)
         # Mirror the commit onto the working snapshot (§3.4.3): later
         # placements this cycle see it without re-taking the cluster.
-        snap.apply_placement(sched.placement)
+        ctx.snap.apply_placement(sched.placement)
         job.placement = sched.placement
         job.state = JobState.RUNNING
-        job.start_time = now
+        job.start_time = ctx.now
         job.backfilled = backfilled
         self._remove_from_queue(job)
         self.running[job.uid] = job
         result.scheduled.append(job)
+        for plugin in profile.post_bind:
+            plugin.post_bind(job, sched.placement, ctx)
         return True
 
     # -- lifecycle callbacks from the simulator --------------------------
@@ -244,57 +251,37 @@ class QSCH:
         job.state = JobState.COMPLETED
         job.end_time = now
 
-    def _preempt(self, job: Job, state: ClusterState, snap: Snapshot,
-                 now: float, result: CycleResult) -> None:
-        released = state.release(job.uid)
-        snap.apply_release(released)
+    def preempt_job(self, job: Job, ctx: CycleContext) -> None:
+        """Evict one running job and requeue it (used by the preemption
+        engine and the Preempt plugins)."""
+        released = ctx.state.release(job.uid)
+        ctx.snap.apply_release(released)
         self.quota.refund(job)
         del self.running[job.uid]
         job.state = JobState.PREEMPTED
         job.preempt_count += 1
         job.end_time = None
-        result.preempted.append(job)
+        ctx.result.preempted.append(job)
         self.requeue(job)
+        ctx.result.requeues += 1
 
-    # -- preemption helpers (§3.2.3) --------------------------------------
-    def _backfill_preempt_for(self, head: Job, state: ClusterState,
-                              snap: Snapshot, now: float,
-                              result: CycleResult) -> None:
-        """Backfill preemption: evict backfilled jobs (newest first) until
-        the head becomes feasible — but only if it provably can become
-        feasible (conservative policy)."""
-        victims = [j for j in self.running.values()
-                   if j.backfilled and j.preemptible
-                   and j.gpu_type == head.gpu_type]
-        victims.sort(key=lambda j: -(j.start_time or 0.0))
-        pool_free = state.pool_free(head.gpu_type)
-        reclaimable = sum(v.n_gpus for v in victims)
-        if pool_free + reclaimable < head.n_gpus:
-            return  # preemption cannot help; don't thrash
-        budget = self.config.max_preemptions_per_cycle
-        for victim in victims:
-            if budget <= 0:
+    # -- conservative preemption engine (§3.2.3) --------------------------
+    def _run_preempt_chain(self, job: Job, ctx: CycleContext) -> None:
+        """First Preempt plugin with victims wins; evictions only happen
+        when the dry-run shows they can make ``job`` feasible.  A plugin
+        without victims gets its ``execute`` hook instead (execute-only
+        plugins own their whole flow, including placement)."""
+        victims: List[Job] = []
+        for plugin in self.profile_for(job).preempt:
+            victims = plugin.victims(job, ctx)
+            if victims:
                 break
-            if self._dynamic_admit(head, snap) and \
-                    self.rsch.schedule(head, snap).placement is not None:
+            plugin.execute(job, ctx)
+            if job.state is JobState.RUNNING:
                 return
-            self._preempt(victim, state, snap, now, result)
-            budget -= 1
-
-    def _try_priority_preemption(self, job: Job, state: ClusterState,
-                                 snap: Snapshot, now: float,
-                                 result: CycleResult) -> None:
-        victims = [j for j in self.running.values()
-                   if j.priority < job.priority and j.preemptible
-                   and j.gpu_type == job.gpu_type]
-        if not victims:
-            # Quota reclamation preemption: shared-mode borrowers block the
-            # owner's quota (§3.2.3).
-            victims = self.quota.reclaim_candidates(
-                job.tenant, job.gpu_type, list(self.running.values()))
         if not victims:
             return
-        pool_free = state.pool_free(job.gpu_type)
+        pool_free = ctx.state.pool_free(job.gpu_type)
         reclaimable = sum(v.n_gpus for v in victims)
         if pool_free + reclaimable < job.n_gpus:
             return
@@ -303,9 +290,9 @@ class QSCH:
         for victim in victims:
             if budget <= 0:
                 break
-            if self._dynamic_admit(job, snap):
+            if self.dynamic_admit(job, ctx):
                 break
-            self._preempt(victim, state, snap, now, result)
+            self.preempt_job(victim, ctx)
             budget -= 1
-        if self._dynamic_admit(job, snap):
-            self._try_place(job, state, snap, now, result)
+        if self.dynamic_admit(job, ctx):
+            self.try_place(job, ctx)

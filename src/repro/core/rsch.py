@@ -1,25 +1,34 @@
-"""RSCH — the Resource-aware Scheduler (paper §3.3).
+"""RSCH — the Resource-aware Scheduler (paper §3.3), as a placement
+engine running its profile's plugin chains.
 
-RSCH turns an admitted job into a concrete :class:`Placement`:
+RSCH turns an admitted job into a concrete :class:`Placement` by running
+the :class:`~repro.core.framework.api.SchedulingProfile` selected for
+the job's workload kind (train / inference / best-effort):
 
-1. **Node-pool restriction** (§3.4.1): only nodes of the requested GPU
-   type are considered.
-2. **Two-level scheduling** (§3.4.2): first preselect NodeNetGroups
-   (LeafGroups) with enough free capacity, then select nodes inside the
-   chosen groups.
-3. **Strategy scoring** (§3.3.3/§3.3.4): Binpack, E-Binpack, Spread or
-   E-Spread via the shared fused filter+score pass
-   (:mod:`repro.core.scoring`, Pallas kernel in
-   :mod:`repro.kernels.node_score`).
-4. **Gang semantics** (§3.3.2): the whole job is placed transactionally —
-   if any pod cannot be placed the job stays pending and no state is
+1. **Plan** — the profile yields an ordered list of
+   :class:`~repro.core.framework.api.PlacementPass` attempts (e.g. the
+   E-Spread zone dance, §3.3.4); the first pass that places wins.
+2. **Filter** (§3.4.1): the pass's Filter plugins produce the node-pool
+   mask.  The default GpuTypeFilter+HealthFilter pair resolves through
+   the snapshot's cached ``candidate_pool`` fast path.
+3. **Level-1 group preselection** (§3.4.2): NodeNetGroups chosen by the
+   pass's ``spread``/``enhanced`` flags (§3.3.3/§3.3.5).
+4. **Score** (§3.3.3/§3.3.4): Score plugins contribute to ONE fused
+   filter+score pass (numpy/jnp/Pallas, :mod:`repro.core.scoring`);
+   snapshot-static extra terms are added onto it, pod-dependent bonuses
+   are folded into the batched slot chains.
+5. **Gang semantics** (§3.3.2): the whole job is placed transactionally
+   — if any pod cannot be placed the job stays pending and no state is
    mutated.
-5. **Fine-grained device selection** (§3.3.1): within a node, pick the
-   healthy GPU combination with the best interconnect (NVLink island >
-   same-NUMA > cross-NUMA) and pair it with the island's RDMA NIC.
-6. **Topology awareness** (§3.3.5): groups are chosen to minimize the
-   number of NodeNetGroups (JTTED) preferring same-spine neighbours;
-   EP-style jobs can be pinned to a single HBD.
+6. **Fine-grained device selection** (§3.3.1): within a node, pick the
+   healthy GPU combination with the best interconnect and pair it with
+   the island's RDMA NIC.
+
+The legacy ``Strategy`` enum and ``RSCHConfig(train_strategy=...)`` are
+kept as a deprecation shim: :func:`profiles_from_config` maps them onto
+default profiles built from the built-in plugins, placement-identical
+to the pre-framework scheduler (asserted by
+``benchmarks/sched_scale_bench.py`` and ``tests/test_framework.py``).
 """
 
 from __future__ import annotations
@@ -30,32 +39,38 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .cluster import ClusterState
+from .framework.api import (PlacementPass, ProfileSet, SchedulingContext,
+                            SchedulingProfile, single_pass_plan)
+from .framework.builtin import (GpuTypeFilter, HealthFilter, binpack_pass,
+                                ebinpack_pass, espread_plan, make_profile,
+                                spread_pass)
 from .job import Job, JobKind, Placement, PodPlacement
-from .scoring import (BINPACK, E_BINPACK, E_SPREAD, NEG_INF, SPREAD,
-                      ScoreWeights, compute_node_scores, node_scores_np,
+from .scoring import (NEG_INF, ScoreWeights, combine_weights,
+                      compute_node_scores, node_scores_np,
                       select_gang_slots)
 from .snapshot import Snapshot
 from .topology import ClusterTopology
 
 
 class Strategy(enum.Enum):
+    """Legacy strategy names (shim over the plugin profiles; the weight
+    compositions live in :mod:`repro.core.framework.builtin`)."""
+
     BINPACK = "binpack"
     E_BINPACK = "e-binpack"
     SPREAD = "spread"
     E_SPREAD = "e-spread"
 
 
-_WEIGHTS: Dict[Strategy, ScoreWeights] = {
-    Strategy.BINPACK: BINPACK,
-    Strategy.E_BINPACK: E_BINPACK,
-    Strategy.SPREAD: SPREAD,
-    Strategy.E_SPREAD: E_SPREAD,
-}
-
-
 @dataclasses.dataclass
 class RSCHConfig:
+    """Engine knobs + the legacy strategy shim.
+
+    ``train_strategy``/``infer_strategy`` only matter when no explicit
+    ``profiles`` are passed to :class:`RSCH`; they are then mapped onto
+    default profiles via :func:`profiles_from_config`.
+    """
+
     train_strategy: Strategy = Strategy.E_BINPACK
     infer_strategy: Strategy = Strategy.E_SPREAD
     # E-Spread (§3.3.4): inference pods smaller than this use the dedicated
@@ -76,6 +91,39 @@ class RSCHConfig:
     colocate_bonus: float = 2.0
 
 
+def profiles_from_config(config: RSCHConfig) -> ProfileSet:
+    """Deprecation shim: legacy ``Strategy`` pair -> default profiles.
+
+    The resulting profiles are placement-identical to the pre-framework
+    RSCH for every (strategy, workload) combination, including the
+    train-with-E-Spread fallback to E-Binpack and the inference zone
+    dance.
+    """
+    def plan_for(strategy: Strategy, for_infer: bool):
+        # Co-location only ever applied to enhanced strategies on
+        # non-inference jobs (the old `enhanced and kind != INFER` gate).
+        colocate = 0.0 if for_infer else config.colocate_bonus
+        if strategy is Strategy.BINPACK:
+            return single_pass_plan(binpack_pass())
+        if strategy is Strategy.SPREAD:
+            return single_pass_plan(spread_pass())
+        if strategy is Strategy.E_BINPACK:
+            return single_pass_plan(ebinpack_pass(colocate))
+        return espread_plan(config.espread_small_pod_gpus, colocate)
+
+    return ProfileSet(
+        train=make_profile(
+            f"train-{config.train_strategy.value}",
+            plan_for(config.train_strategy, for_infer=False)),
+        inference=make_profile(
+            f"inference-{config.infer_strategy.value}",
+            plan_for(config.infer_strategy, for_infer=True)),
+        best_effort=make_profile(
+            f"best-effort-{config.train_strategy.value}",
+            plan_for(config.train_strategy, for_infer=False)),
+    )
+
+
 @dataclasses.dataclass
 class ScheduleResult:
     placement: Optional[Placement]
@@ -85,9 +133,11 @@ class ScheduleResult:
 
 class RSCH:
     def __init__(self, topology: ClusterTopology,
-                 config: Optional[RSCHConfig] = None) -> None:
+                 config: Optional[RSCHConfig] = None,
+                 profiles: Optional[ProfileSet] = None) -> None:
         self.topology = topology
         self.config = config or RSCHConfig()
+        self.profiles = profiles or profiles_from_config(self.config)
         self._link_class = topology.gpu_link_class()
         self._nic = topology.nic_for_gpu()
         # Device selection runs once per placed pod; python lists over the
@@ -101,62 +151,96 @@ class RSCH:
     # ------------------------------------------------------------------
     # Public API
     # ------------------------------------------------------------------
+    def profile_for(self, job: Job) -> SchedulingProfile:
+        return self.profiles.for_job(job)
+
     def strategy_for(self, job: Job) -> Strategy:
+        """Legacy shim: the strategy the config would have used."""
         if job.kind is JobKind.INFER:
             return self.config.infer_strategy
         return self.config.train_strategy
 
     def feasible(self, job: Job, snap: Snapshot) -> bool:
         """Dynamic-resource-admission check (§3.2.1): are there enough
-        free, healthy GPUs in the job's node pool right now?"""
-        pool = snap.candidate_pool(job.gpu_type)
+        free, healthy GPUs in the job's node pool right now?
+
+        The pool honors the profile's full Filter chain (zone-agnostic,
+        like the legacy check) — otherwise a restrictive custom filter
+        would let admission pass forever while placement always fails.
+        """
+        pool, _ = self._resolve_pool(job, snap, self.profile_for(job),
+                                     None)
         per_node_ok = snap.free_gpus >= job.gpus_per_pod
         capacity = int((snap.free_gpus // job.gpus_per_pod)[
             pool & per_node_ok].sum())
         return capacity >= job.n_pods
 
-    def schedule(self, job: Job, snap: Snapshot) -> ScheduleResult:
+    def schedule(self, job: Job, snap: Snapshot,
+                 ctx: Optional[SchedulingContext] = None) -> ScheduleResult:
         """Compute a placement against a snapshot.  Pure — commits happen
-        via ``ClusterState.allocate`` by the caller."""
-        strategy = self.strategy_for(job)
-        if (strategy is Strategy.E_SPREAD and job.kind is JobKind.INFER
-                and job.gpus_per_pod < self.config.espread_small_pod_gpus
-                and bool(snap.inference_zone.any())):
-            result = self._schedule_with_mask(
-                job, snap, Strategy.E_SPREAD, zone="zone")
+        via ``ClusterState.allocate`` by the caller.  ``ctx`` gives
+        Score plugins optional cluster context (e.g. running jobs)."""
+        profile = self.profile_for(job)
+        result = ScheduleResult(None, "empty placement plan")
+        for pass_ in profile.plan(job, snap):
+            result = self._run_pass(job, snap, pass_, profile, ctx)
             if result.placement is not None:
                 return result
-            # Remaining replicas: E-Binpack in the general pool (§3.3.4).
-            return self._schedule_with_mask(
-                job, snap, Strategy.E_BINPACK, zone="general")
-        if strategy is Strategy.E_SPREAD:
-            # Large inference pods get consolidated full nodes in the
-            # general pool, keeping the dedicated zone for small
-            # replicas (§3.3.4); fall back to anywhere if it's full.
-            strategy = Strategy.E_BINPACK
-            if bool(snap.inference_zone.any()):
-                result = self._schedule_with_mask(
-                    job, snap, strategy, zone="general")
-                if result.placement is not None:
-                    return result
-        return self._schedule_with_mask(job, snap, strategy, None)
+        return result
 
     # ------------------------------------------------------------------
-    # Core two-level placement
+    # Core two-level placement (one PlacementPass)
     # ------------------------------------------------------------------
-    def _schedule_with_mask(self, job: Job, snap: Snapshot,
-                            strategy: Strategy, zone: Optional[str]
-                            ) -> ScheduleResult:
+    def _resolve_pool(self, job: Job, snap: Snapshot,
+                      profile: SchedulingProfile,
+                      zone: Optional[str]) -> Tuple[np.ndarray, bool]:
+        """Run the Filter chain.  The default GpuTypeFilter+HealthFilter
+        pair hits the snapshot's cached pool mask (§3.4.1); extra
+        plugins AND their masks on top.  Returns ``(pool, default)``
+        where ``default`` says the pool equals the cached default mask
+        (safe to key derived caches on ``(gpu_type, zone)``).
+
+        Exact-type check, not isinstance: a subclass overriding
+        ``mask()`` must go through the generic path, never be silently
+        swallowed by the fast path."""
+        filters = profile.filters
+        extras = [f for f in filters
+                  if type(f) not in (GpuTypeFilter, HealthFilter)]
+        defaults = sorted(type(f).__name__ for f in filters
+                          if type(f) in (GpuTypeFilter, HealthFilter))
+        if defaults == ["GpuTypeFilter", "HealthFilter"]:
+            pool = snap.candidate_pool(int(job.gpu_type), zone)
+            default = not extras
+            for f in extras:
+                pool = pool & np.asarray(f.mask(job, snap, zone),
+                                         dtype=bool)
+        else:
+            pool = np.ones(snap.free_gpus.shape[0], dtype=bool)
+            for f in filters:
+                pool = pool & np.asarray(f.mask(job, snap, zone),
+                                         dtype=bool)
+            if zone == "zone":
+                pool = pool & snap.inference_zone
+            elif zone == "general":
+                pool = pool & ~snap.inference_zone
+            default = False
+        return pool, default
+
+    def _run_pass(self, job: Job, snap: Snapshot, pass_: PlacementPass,
+                  profile: SchedulingProfile,
+                  ctx: Optional[SchedulingContext]) -> ScheduleResult:
         topo = self.topology
-        pool = snap.candidate_pool(job.gpu_type, zone)
+        pool, default_pool = self._resolve_pool(job, snap, profile,
+                                                pass_.zone)
         if not pool.any():
             return ScheduleResult(None, "empty node pool")
 
         # --- Level 1: NodeNetGroup preselection (§3.4.2) ---------------
-        enhanced = strategy in (Strategy.E_BINPACK, Strategy.E_SPREAD)
         pod_slots = np.where(pool, snap.free_gpus // job.gpus_per_pod, 0)
-        selected_groups = self._preselect_groups(job, snap, pool, pod_slots,
-                                                 enhanced, strategy)
+        group_term = self._group_score_terms(job, snap, pool, pass_, ctx)
+        selected_groups = self._preselect_groups(
+            job, snap, pool, pod_slots, pass_.enhanced, pass_.spread,
+            group_term)
         if selected_groups is None:
             return ScheduleResult(None, "no NodeNetGroup set satisfies job")
         # One gather resolves both group membership and the per-node
@@ -168,40 +252,44 @@ class RSCH:
         in_groups = topo_pref > 0.0
 
         # --- Level 2: node selection within selected groups ------------
-        weights = _WEIGHTS[strategy]
+        # Score chain: fused weights go through the shared kernel pass;
+        # snapshot-static extra terms are added on top; pod-dependent
+        # bonuses fold into the slot chains (see framework.api contract).
+        weights = combine_weights(
+            w for w in (s.fused_weights(job) for s in pass_.scorers)
+            if w is not None)
+        colocate = sum(s.per_pod_bonus(job) for s in pass_.scorers
+                       if s.pod_dependent)
         group_used = np.bincount(
             topo.leaf_id, weights=np.where(pool, snap.used_gpus, 0),
             minlength=topo.n_leaf_groups).astype(np.float32)
-        cap_key = ("group_cap", int(job.gpu_type), zone)
-        group_cap = snap.derived.get(cap_key)
+        cap_key = ("group_cap", int(job.gpu_type), pass_.zone)
+        group_cap = snap.derived.get(cap_key) if default_pool else None
         if group_cap is None:
             # Healthy capacity per group is delta-invariant -> cacheable
-            # for the rest of the cycle.
+            # for the rest of the cycle (default pools only: custom
+            # Filter chains may shape the pool per job).
             group_cap = np.bincount(
                 topo.leaf_id,
                 weights=np.where(pool, snap.healthy_per_node(), 0),
                 minlength=topo.n_leaf_groups).astype(np.float32)
-            snap.derived[cap_key] = group_cap
+            if default_pool:
+                snap.derived[cap_key] = group_cap
         group_load = group_used / np.maximum(group_cap, 1.0)
         # topo_pref (computed above) prefers earlier-ranked (anchor)
         # groups, keeping a multi-pod job inside as few groups as
         # possible (§3.3.3 LeafGroup E-Binpack).
         mask = pool & in_groups
         gload_nodes = group_load[topo.leaf_id]
-        # Same-node co-location bonus (node-level E-Binpack §3.3.3): pods
-        # of this job already on a node make it more attractive for the
-        # next pod; in the batched path it is folded into the per-node
-        # slot chains.
-        colocate = (self.config.colocate_bonus
-                    if enhanced and job.kind is not JobKind.INFER else 0.0)
+        extra = self._extra_score_terms(job, snap, pool, pass_, ctx)
         if self.config.batched_gang:
             nodes = self._select_nodes_batched(
                 job, snap, mask, gload_nodes, topo_pref, weights, colocate,
-                np.where(in_groups, pod_slots, 0))
+                np.where(in_groups, pod_slots, 0), extra)
         else:
             nodes = self._select_nodes_sequential(
                 job, snap, pool, in_groups, gload_nodes, topo_pref,
-                weights, colocate)
+                weights, colocate, extra)
         if nodes is None:
             return ScheduleResult(None, "gang placement failed")
 
@@ -227,6 +315,38 @@ class RSCH:
         n_groups = len({int(topo.leaf_id[p.node]) for p in pods})
         return ScheduleResult(placement, "ok", groups_used=n_groups)
 
+    def _group_score_terms(self, job: Job, snap: Snapshot,
+                           pool: np.ndarray, pass_: PlacementPass,
+                           ctx: Optional[SchedulingContext]
+                           ) -> Optional[np.ndarray]:
+        """Sum of Score-plugin group-level terms biasing Level-1
+        preselection (None in the default profiles -> zero overhead)."""
+        total: Optional[np.ndarray] = None
+        for s in pass_.scorers:
+            term = s.group_score(job, snap, pool, ctx)
+            if term is None:
+                continue
+            term = np.asarray(term, dtype=np.float64)
+            total = term if total is None else total + term
+        return total
+
+    def _extra_score_terms(self, job: Job, snap: Snapshot,
+                           pool: np.ndarray, pass_: PlacementPass,
+                           ctx: Optional[SchedulingContext]
+                           ) -> Optional[np.ndarray]:
+        """Sum of snapshot-static Score-plugin terms outside the fused
+        weight vector (None in the default profiles -> zero overhead)."""
+        total: Optional[np.ndarray] = None
+        for s in pass_.scorers:
+            if s.pod_dependent:
+                continue
+            term = s.score(job, snap, pool, ctx)
+            if term is None:
+                continue
+            term = np.asarray(term, dtype=np.float32)
+            total = term if total is None else total + term
+        return total
+
     # ------------------------------------------------------------------
     # Node selection: batched (one fused pass) vs sequential (per pod)
     # ------------------------------------------------------------------
@@ -234,7 +354,8 @@ class RSCH:
                               mask: np.ndarray, gload_nodes: np.ndarray,
                               topo_pref: np.ndarray, weights: ScoreWeights,
                               colocate: float,
-                              slots: Optional[np.ndarray] = None
+                              slots: Optional[np.ndarray] = None,
+                              extra: Optional[np.ndarray] = None
                               ) -> Optional[List[int]]:
         """Whole-gang placement from ONE filter+score pass (§3.4).
 
@@ -258,6 +379,8 @@ class RSCH:
                 backend=backend)
             scores = np.asarray(s)
             slots = np.asarray(sl).astype(np.int64)
+        if extra is not None:
+            scores = np.where(scores > NEG_INF, scores + extra, scores)
         return select_gang_slots(
             scores, snap.free_gpus, job.gpus_per_pod, job.n_pods,
             fit_weight=weights.fit, colocate_bonus=colocate, slots=slots)
@@ -267,7 +390,9 @@ class RSCH:
                                  gload_nodes: np.ndarray,
                                  topo_pref: np.ndarray,
                                  weights: ScoreWeights,
-                                 colocate: float) -> Optional[List[int]]:
+                                 colocate: float,
+                                 extra: Optional[np.ndarray] = None
+                                 ) -> Optional[List[int]]:
         """The replaced O(n_pods × n_nodes) loop: full filter+score pass
         and argmax once per pod, with the per-pod co-location sweep.
         Kept verbatim as the A/B baseline the batched engine is measured
@@ -281,6 +406,8 @@ class RSCH:
                 free, snap.used_gpus + 0, mask, gload_nodes, topo_pref,
                 job.gpus_per_pod, self.topology.gpus_per_node, weights,
                 backend=backend)
+            if extra is not None:
+                scores = np.where(scores > NEG_INF, scores + extra, scores)
             if colocate and nodes:
                 for n in nodes:
                     if scores[n] > NEG_INF:
@@ -295,17 +422,21 @@ class RSCH:
     # ------------------------------------------------------------------
     def _preselect_groups(self, job: Job, snap: Snapshot, pool: np.ndarray,
                           pod_slots: np.ndarray, enhanced: bool,
-                          strategy: Strategy) -> Optional[List[int]]:
+                          spread: bool,
+                          group_term: Optional[np.ndarray] = None
+                          ) -> Optional[List[int]]:
         """Pick an ordered list of candidate NodeNetGroups.
 
-        * small job + E-Binpack: busiest group that still fits (consolidate,
-          keep empty groups reserved for large jobs);
-        * spread strategies: all groups, emptiest first;
+        * small job + enhanced binpack: busiest group that still fits
+          (consolidate, keep empty groups reserved for large jobs);
+        * spread passes: all groups, emptiest first;
         * large jobs: greedy minimal set of groups, preferring same-spine
           neighbours (JTTED: fewest groups, closest topology).
 
         ``pod_slots`` is the per-node capacity expansion
         ``floor(free / gpus_per_pod)`` restricted to the pool.
+        ``group_term`` (Score plugins' group-level contribution) ranks
+        above the pass's default keys; ties fall through to them.
         """
         topo = self.topology
         group_slots = np.bincount(topo.leaf_id, weights=pod_slots,
@@ -324,7 +455,7 @@ class RSCH:
             group_free = np.bincount(
                 topo.leaf_id, weights=np.where(pool, snap.free_gpus, 0),
                 minlength=topo.n_leaf_groups).astype(int)
-            if strategy in (Strategy.SPREAD, Strategy.E_SPREAD):
+            if spread:
                 # Spread wants room: emptiest group first.
                 keys = (fits_one, -group_free[fits_one])
             else:
@@ -342,16 +473,25 @@ class RSCH:
                     # too but without reserving empties (same order,
                     # documented).
                     keys = (fits_one, -group_used[fits_one])
+            if group_term is not None:
+                # lexsort: last key is primary -> plugin term outranks
+                # the default ranking, defaults break ties.
+                keys = keys + (-group_term[fits_one],)
             return [int(fits_one[np.lexsort(keys)[0]])]
 
         # Multi-group job: greedy cover minimizing group count, preferring
         # same-spine neighbours of the seed group (topology-aware §3.3.5).
-        seed = int(candidates[np.lexsort(
-            (candidates, -group_slots[candidates]))[0]])
+        seed_keys = (candidates, -group_slots[candidates])
+        if group_term is not None:
+            seed_keys = seed_keys + (-group_term[candidates],)
+        seed = int(candidates[np.lexsort(seed_keys)[0]])
         group_spine = self._group_spine
         rest = candidates[candidates != seed]
-        rest = rest[np.lexsort((rest, -group_slots[rest],
-                                group_spine[rest] != group_spine[seed]))]
+        rest_keys = (rest, -group_slots[rest],
+                     group_spine[rest] != group_spine[seed])
+        if group_term is not None:
+            rest_keys = rest_keys + (-group_term[rest],)
+        rest = rest[np.lexsort(rest_keys)]
         # Greedy prefix: smallest set of groups whose slot total covers the
         # job (fits_one was empty, so the seed alone never suffices).
         covered = int(group_slots[seed]) + np.cumsum(group_slots[rest])

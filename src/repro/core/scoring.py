@@ -47,7 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional
+from typing import Iterable, List, Optional
 
 import numpy as np
 
@@ -64,6 +64,18 @@ class ScoreWeights:
     def as_array(self) -> np.ndarray:
         return np.asarray([self.used, self.fit, self.group, self.topo],
                           dtype=np.float32)
+
+
+def combine_weights(weights: "Iterable[ScoreWeights]") -> ScoreWeights:
+    """Sum per-term weights contributed by a Score plugin chain into the
+    single weight vector of the fused filter+score pass."""
+    used = fit = group = topo = 0.0
+    for w in weights:
+        used += w.used
+        fit += w.fit
+        group += w.group
+        topo += w.topo
+    return ScoreWeights(used=used, fit=fit, group=group, topo=topo)
 
 
 BINPACK = ScoreWeights(used=1.0, fit=0.5, group=0.0, topo=0.0)

@@ -41,6 +41,12 @@ class SimResult:
     end_time: float
     cycles: int
     preemptions: int
+    # Why jobs waited (summed over cycles; see CycleResult counters):
+    # static-admission rejections, dynamic-admission failures, and
+    # requeue events (§3.2.4: placement failures + preemptions).
+    admit_rejected: int = 0
+    infeasible: int = 0
+    requeues: int = 0
 
 
 _SUBMIT, _END, _TICK, _SAMPLE = 0, 1, 2, 3
@@ -77,6 +83,9 @@ class Simulator:
         now = 0.0
         cycles = 0
         preemptions = 0
+        admit_rejected = 0
+        infeasible = 0
+        requeues = 0
         pending_ends: Dict[int, float] = {}
 
         while self._heap:
@@ -99,6 +108,9 @@ class Simulator:
                 result = self.qsch.cycle(self.state, now)
                 cycles += 1
                 preemptions += len(result.preempted)
+                admit_rejected += result.admit_rejected
+                infeasible += result.infeasible
+                requeues += result.requeues
                 for job in result.scheduled:
                     self.metrics.on_job_placed(job)
                     job.run_time = now + cfg.binding_latency
@@ -118,7 +130,9 @@ class Simulator:
         self.metrics.sample(now, self.state, self.qsch.queue_depth())
         return SimResult(jobs=list(jobs), metrics=self.metrics,
                          end_time=now, cycles=cycles,
-                         preemptions=preemptions)
+                         preemptions=preemptions,
+                         admit_rejected=admit_rejected,
+                         infeasible=infeasible, requeues=requeues)
 
     def _has_future_submissions(self) -> bool:
         return self._pending_submissions > 0

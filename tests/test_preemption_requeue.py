@@ -1,0 +1,139 @@
+"""Backfill head-timeout preemption + requeue accounting (§3.2.3/§3.2.4).
+
+Direct coverage of the paths the policy benchmarks rely on: the
+head-timeout eviction order and budget, and the ``requeue_count`` /
+``backfilled`` bookkeeping that every requeue must reset.
+"""
+
+from repro.core import (JobKind, Job, JobState, QSCHConfig, QueuePolicy,
+                        QuotaManager, RSCH, SimConfig, Simulator,
+                        ClusterState)
+from conftest import make_qsch
+
+
+def _job(uid, gpus=8, n_pods=1, prio=50, t=0.0, dur=3600.0):
+    return Job(uid=uid, tenant="t0", gpu_type=0, n_pods=n_pods,
+               gpus_per_pod=gpus, priority=prio, submit_time=t,
+               duration=dur)
+
+
+def _fill(qsch, state, n=16, now=0.0, uid0=100):
+    for i in range(n):
+        qsch.submit(_job(uid0 + i, gpus=8, t=now))
+    res = qsch.cycle(state, now)
+    assert len(res.scheduled) == n
+
+
+def test_backfill_timeout_evicts_newest_backfilled_first(topo, state):
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BACKFILL,
+                     backfill_head_timeout=100.0)
+    _fill(qsch, state, n=14)                      # two nodes stay free
+    qsch.submit(_job(1, n_pods=4, gpus=8, t=10.0))   # head needs 4 nodes
+    qsch.submit(_job(2, gpus=8, t=11.0))             # backfill, older
+    res = qsch.cycle(state, 20.0)
+    assert {j.uid for j in res.scheduled} == {2}
+    qsch.submit(_job(3, gpus=8, t=21.0))             # backfill, newer
+    res = qsch.cycle(state, 30.0)
+    assert {j.uid for j in res.scheduled} == {3}
+    assert all(j.backfilled for j in qsch.running.values()
+               if j.uid in (2, 3))
+    # Two running jobs end -> with both backfilled evicted, 4 nodes open.
+    for uid in (100, 101):
+        qsch.on_complete(qsch.running[uid], state, 110.0)
+    res = qsch.cycle(state, 140.0)
+    # Head became feasible only after evicting BOTH backfilled jobs,
+    # newest (uid 3) first.
+    assert [j.uid for j in res.preempted] == [3, 2]
+    assert any(j.uid == 1 for j in res.scheduled)
+    assert res.requeues == 2
+
+
+def test_backfill_timeout_respects_preemption_budget(topo, state):
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BACKFILL,
+                     backfill_head_timeout=100.0,
+                     max_preemptions_per_cycle=1)
+    _fill(qsch, state, n=14)
+    qsch.submit(_job(1, n_pods=4, gpus=8, t=10.0))
+    qsch.submit(_job(2, gpus=8, t=11.0))
+    qsch.submit(_job(3, gpus=8, t=12.0))
+    qsch.cycle(state, 20.0)                      # 2 and 3 backfill
+    for uid in (100, 101):
+        qsch.on_complete(qsch.running[uid], state, 110.0)
+    res = qsch.cycle(state, 140.0)
+    # Budget of 1: only one eviction per cycle, head still blocked.
+    assert len(res.preempted) == 1
+    assert res.blocked_head is not None and res.blocked_head.uid == 1
+
+
+def test_requeue_resets_backfilled_and_counts(topo, state):
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BACKFILL,
+                     backfill_head_timeout=100.0)
+    _fill(qsch, state, n=15)
+    qsch.submit(_job(1, n_pods=2, gpus=8, t=10.0))   # blocked head
+    qsch.submit(_job(2, gpus=8, t=11.0))             # backfills
+    qsch.cycle(state, 20.0)
+    done = next(j for j in qsch.running.values() if j.uid == 100)
+    qsch.on_complete(done, state, 110.0)
+    res = qsch.cycle(state, 130.0)                   # head preempts 2
+    assert any(j.uid == 2 for j in res.preempted)
+    j2 = next(j for j in qsch.pending_jobs() if j.uid == 2)
+    # §3.2.4 bookkeeping: requeue restores a clean pending job.
+    assert j2.state is JobState.PENDING
+    assert j2.requeue_count == 1
+    assert j2.preempt_count == 1
+    assert j2.backfilled is False
+    assert j2.placement is None
+    assert res.requeues == 1
+
+
+def test_preempted_job_reschedules_and_completes(topo):
+    """End-to-end through the simulator: a preempted backfilled job is
+    requeued, rescheduled and finishes; counters line up."""
+    state = ClusterState.create(topo)
+    qsch = make_qsch(topo, state, policy=QueuePolicy.BACKFILL,
+                     backfill_head_timeout=60.0)
+    sim = Simulator(state, qsch, SimConfig(tick_interval=30.0,
+                                           sample_interval=300.0,
+                                           binding_latency=0.0))
+    # 15 fillers occupy 15 of 16 nodes; one ends early so the blocked
+    # head (2 nodes) becomes helpable by evicting the backfilled job.
+    jobs = [_job(100 + i, gpus=8, t=0.0,
+                 dur=(100.0 if i == 0 else 3600.0)) for i in range(15)]
+    jobs.append(_job(1, n_pods=2, gpus=8, t=10.0, dur=100.0))  # head
+    jobs.append(_job(2, gpus=8, t=11.0, dur=600.0))            # backfill
+    result = sim.run(jobs)
+    j2 = next(j for j in result.jobs if j.uid == 2)
+    assert j2.state is JobState.COMPLETED
+    assert j2.preempt_count >= 1
+    assert j2.requeue_count >= 1
+    assert result.preemptions >= 1
+    assert result.requeues >= result.preemptions
+    assert state.total_allocated() == 0
+
+
+def test_placement_failure_requeues_with_count(topo, state):
+    """Dynamic admission can pass while gang placement fails
+    (fragmentation): the job must requeue, not deadlock."""
+    # Fragment: every node keeps 4 free GPUs -> 64 free total, but no
+    # node can host an 8-GPU pod.
+    for node in range(state.n_nodes):
+        state.gpu_busy[node, :4] = True
+    qsch = make_qsch(topo, state)
+    qsch.submit(_job(1, n_pods=1, gpus=6))
+    res = qsch.cycle(state, 0.0)
+    assert res.scheduled == []
+    # feasible() said no (6 > 4 free per node) -> infeasible, no requeue
+    assert res.infeasible == 1
+    job = qsch.pending_jobs()[0]
+    assert job.requeue_count == 0
+
+    # A gang too wide for one LeafGroup set that passes feasibility but
+    # fails device selection is hard to build here; exercise requeue()
+    # directly for the bookkeeping contract instead.
+    job.backfilled = True
+    job.placement = object()
+    qsch._remove_from_queue(job)
+    qsch.requeue(job)
+    assert job.requeue_count == 1
+    assert job.backfilled is False and job.placement is None
+    assert job.state is JobState.PENDING
