@@ -10,6 +10,8 @@ paper's *directional* claim.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -19,6 +21,27 @@ from repro.core import (ClusterState, Job, QSCH, QSCHConfig, QueuePolicy,
                         SimConfig, Simulator, SimResult, Strategy,
                         training_trace)
 from repro.core.topology import ClusterTopology
+
+
+def bench_seed(default: int = 0) -> int:
+    """The run-wide benchmark seed.
+
+    ``benchmarks/run.py --seed N`` exports ``REPRO_BENCH_SEED`` before
+    importing any benchmark module, so every stochastic piece of a
+    benchmark (trace generation, failure injection, autoscaler jitter)
+    derives from ONE knob and a rerun with the same seed reproduces the
+    same numbers bit-for-bit."""
+    return int(os.environ.get("REPRO_BENCH_SEED", default))
+
+
+def write_bench_json(name: str, payload: Dict) -> str:
+    """Drop a ``BENCH_<name>.json`` summary next to the CWD; CI uploads
+    these as workflow artifacts so the perf trajectory is kept per-PR."""
+    path = os.path.abspath(f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=float)
+    print(f"    [json] {path}")
+    return path
 
 
 def scale_topology(n_gpus: int = 1024, gpus_per_node: int = 8,
@@ -66,7 +89,8 @@ def clone_jobs(jobs: Sequence[Job]) -> List[Job]:
     return [Job(uid=j.uid, tenant=j.tenant, gpu_type=j.gpu_type,
                 n_pods=j.n_pods, gpus_per_pod=j.gpus_per_pod, kind=j.kind,
                 gang=j.gang, priority=j.priority,
-                submit_time=j.submit_time, duration=j.duration)
+                submit_time=j.submit_time, duration=j.duration,
+                preemptible=j.preemptible)
             for j in jobs]
 
 

@@ -1,0 +1,285 @@
+"""Cluster-dynamics benchmark: parity, checkpoint-restart, tidal.
+
+Three gates, each asserting one acceptance criterion of the dynamics
+subsystem:
+
+1. **Parity** — with dynamics disabled (no injectors, no autoscaler)
+   simulation results are byte-identical to a plain run across the
+   policy x strategy matrix: same placements, same metric report.
+2. **Checkpoint-restart** — under a seeded Weibull node-failure trace,
+   checkpoint-restart recovery retains >= 80 % of the no-failure
+   goodput (useful GPU-seconds of completed work inside the horizon),
+   while the restart-from-scratch baseline retains <= 50 %.
+3. **Tidal autoscaling** — scaling inference fleets along the diurnal
+   demand curve raises overnight GAR (training backfill on reclaimed
+   GPUs, and effective GAR counting only *demanded* inference work)
+   versus a static peak-sized fleet, at unchanged demand satisfaction.
+
+Writes ``BENCH_dynamics.json`` (uploaded as a CI artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/dynamics_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import (bench_seed, clone_jobs, scale_topology,
+                               write_bench_json)  # noqa: E402
+from repro.core import (CheckpointModel, ClusterState, DynamicsConfig, Job,
+                        JobKind, NodeFailureInjector, QSCH, QSCHConfig,
+                        QueuePolicy, QuotaManager, RSCH, RSCHConfig,
+                        SimConfig, Simulator, SimResult, Strategy,
+                        TidalAutoscaler, TidalService,
+                        backfill_training_trace)  # noqa: E402
+
+DAY = 86_400.0
+NIGHT_HOURS = (0.0, 6.0)        # demand trough (peak_hour=14 -> 2am low)
+
+
+def run_sim(jobs: Sequence[Job], *, policy=QueuePolicy.BACKFILL,
+            strategy=Strategy.E_BINPACK, horizon: Optional[float] = None,
+            dynamics: Optional[DynamicsConfig] = None,
+            quota: Optional[Dict] = None, n_gpus: int = 512,
+            tick: float = 30.0):
+    topo = scale_topology(n_gpus=n_gpus)
+    state = ClusterState.create(topo)
+    qm = QuotaManager(quota or {"t0": {0: 10**6}})
+    rsch = RSCH(topo, RSCHConfig(train_strategy=strategy))
+    qsch = QSCH(qm, rsch, QSCHConfig(policy=policy))
+    sim = Simulator(state, qsch,
+                    SimConfig(tick_interval=tick, sample_interval=300.0,
+                              binding_latency=45.0, horizon=horizon,
+                              dynamics=dynamics))
+    return sim.run(clone_jobs(jobs)), state
+
+
+def placement_fingerprint(result: SimResult) -> List:
+    return [(j.uid, j.start_time, j.end_time,
+             tuple((p.node, p.gpu_indices)
+                   for p in (j.placement.pods if j.placement else ())))
+            for j in result.jobs]
+
+
+# ----------------------------------------------------------------------
+# 1. Parity: empty dynamics == no dynamics, byte-identical
+# ----------------------------------------------------------------------
+def parity_gate(seed: int, smoke: bool) -> Dict:
+    from repro.core import training_trace
+    jobs = training_trace(120 if smoke else 240, seed=seed,
+                          arrival_rate_per_hour=500,
+                          mean_duration_s=2400.0)
+    jobs = [j for j in jobs if j.n_gpus <= 128]
+    policies = [QueuePolicy.BACKFILL, QueuePolicy.STRICT_FIFO,
+                QueuePolicy.BEST_EFFORT_FIFO]
+    strategies = [Strategy.E_BINPACK, Strategy.BINPACK]
+    checked = 0
+    for policy in policies:
+        for strategy in strategies:
+            base, _ = run_sim(jobs, policy=policy, strategy=strategy)
+            dyn, _ = run_sim(jobs, policy=policy, strategy=strategy,
+                             dynamics=DynamicsConfig())
+            assert placement_fingerprint(base) == placement_fingerprint(
+                dyn), f"parity broken: {policy} x {strategy}"
+            assert base.metrics.report() == dyn.metrics.report(), \
+                f"metric parity broken: {policy} x {strategy}"
+            checked += 1
+    print(f"--- parity: {checked} policy x strategy configs "
+          f"byte-identical with empty DynamicsConfig")
+    return {"configs_checked": checked}
+
+
+# ----------------------------------------------------------------------
+# 2. Checkpoint-restart vs scratch vs no-failure goodput
+# ----------------------------------------------------------------------
+def _failure_workload(seed: int, smoke: bool) -> List[Job]:
+    """Long jobs relative to the failure MTBF: the regime where restart
+    policy decides whether anything finishes at all."""
+    from repro.core.workload import _pods_for
+    rng = np.random.default_rng(seed)
+    n_jobs = 24 if smoke else 48
+    jobs = []
+    for i in range(n_jobs):
+        n_gpus = int(rng.choice([8, 16, 32, 64], p=[.25, .3, .25, .2]))
+        n_pods, per_pod = _pods_for(n_gpus, gpus_per_node=8)
+        jobs.append(Job(
+            uid=i, tenant="t0", gpu_type=0, n_pods=n_pods,
+            gpus_per_pod=per_pod,
+            submit_time=float(rng.uniform(0.0, 1800.0)),
+            duration=float(rng.uniform(4.0, 6.0)) * 3600.0))
+    return jobs
+
+
+def goodput_gate(seed: int, smoke: bool) -> Dict:
+    jobs = _failure_workload(seed, smoke)
+    horizon = (18 if smoke else 24) * 3600.0
+    mtbf = 6 * 3600.0            # per node -> multi-node gangs hit often
+
+    def injector():
+        return NodeFailureInjector(mtbf_s=mtbf, repair_s=1200.0,
+                                   shape=1.2)
+
+    base, _ = run_sim(jobs, horizon=horizon)
+    ckpt, _ = run_sim(jobs, horizon=horizon, dynamics=DynamicsConfig(
+        plugins=[injector()], seed=seed,
+        recovery=CheckpointModel(interval_s=600.0,
+                                 restart_overhead_s=180.0)))
+    scratch, _ = run_sim(jobs, horizon=horizon, dynamics=DynamicsConfig(
+        plugins=[injector()], seed=seed,
+        recovery=CheckpointModel(interval_s=600.0,
+                                 restart_overhead_s=180.0,
+                                 mode="scratch")))
+
+    base_good = base.metrics.useful_gpu_seconds
+    ratios = {"checkpoint": ckpt.metrics.useful_gpu_seconds / base_good,
+              "scratch": scratch.metrics.useful_gpu_seconds / base_good}
+    print(f"--- checkpoint-restart (node MTBF {mtbf/3600:.0f}h, "
+          f"{ckpt.failures} failures, {ckpt.interrupts} interrupts)")
+    print(f"    goodput vs no-failure: checkpoint "
+          f"{ratios['checkpoint']:.2f}  scratch {ratios['scratch']:.2f}")
+    print(f"    MTTR ckpt {ckpt.metrics.mttr():.0f}s   lost work "
+          f"{ckpt.metrics.lost_gpu_seconds/3600:.0f} GPU-h (ckpt) vs "
+          f"{scratch.metrics.lost_gpu_seconds/3600:.0f} GPU-h (scratch)")
+    assert ratios["checkpoint"] >= 0.80, \
+        f"checkpoint-restart goodput {ratios['checkpoint']:.2f} < 0.80"
+    assert ratios["scratch"] <= 0.50, \
+        f"scratch goodput {ratios['scratch']:.2f} > 0.50"
+    assert ratios["checkpoint"] > ratios["scratch"]
+    return {"goodput_ratio": ratios,
+            "failures": ckpt.failures, "interrupts": ckpt.interrupts,
+            "mttr_s": ckpt.metrics.mttr(),
+            "lost_gpu_h_ckpt": ckpt.metrics.lost_gpu_seconds / 3600.0,
+            "lost_gpu_h_scratch":
+                scratch.metrics.lost_gpu_seconds / 3600.0}
+
+
+# ----------------------------------------------------------------------
+# 3. Tidal autoscaling vs static peak fleet
+# ----------------------------------------------------------------------
+def _night(t: float) -> bool:
+    h = (t % DAY) / 3600.0
+    return NIGHT_HOURS[0] <= h < NIGHT_HOURS[1]
+
+
+def _services(n_gpus: int) -> List[TidalService]:
+    # Peak inference footprint ~half the cluster (4 services x 16
+    # replicas x 4 GPUs = 256 of 512); trough ~6%.
+    return [TidalService(name=f"svc{i}", tenant="svc",
+                         gpus_per_replica=4,
+                         min_replicas=2, max_replicas=16,
+                         peak_hour=14.0)
+            for i in range(4)]
+
+
+def tidal_gate(seed: int, smoke: bool) -> Dict:
+    n_gpus = 512
+    horizon = (2 if smoke else 3) * DAY
+    services = _services(n_gpus)
+    quota = {"svc": {0: 10**6}, "batch": {0: 10**6}}
+    # Deep low-priority backlog: enough queued GPU-hours to soak up
+    # whatever the tide hands back, all night, every night.
+    train = backfill_training_trace(280 if smoke else 460, seed=seed + 1)
+
+    # Static baseline: every service pinned at its peak size for the
+    # whole run (classic peak provisioning — demand always satisfied,
+    # GPUs held overnight).
+    static_fleet = []
+    uid = 9_000_000
+    for svc in services:
+        for _ in range(svc.max_replicas):
+            static_fleet.append(Job(
+                uid=uid, tenant=svc.tenant, gpu_type=svc.gpu_type,
+                n_pods=1, gpus_per_pod=svc.gpus_per_replica,
+                kind=JobKind.INFER,
+                gang=False, priority=svc.priority, submit_time=0.0,
+                duration=horizon + 3600.0, preemptible=False))
+            uid += 1
+    static, _ = run_sim(train + static_fleet, horizon=horizon,
+                        quota=quota, n_gpus=n_gpus)
+
+    scaler = TidalAutoscaler(services, interval_s=900.0)
+    tidal, _ = run_sim(train, horizon=horizon, quota=quota,
+                       n_gpus=n_gpus,
+                       dynamics=DynamicsConfig(plugins=[scaler],
+                                               seed=seed))
+
+    def overnight(result: SimResult) -> Dict[str, float]:
+        """Mean overnight GAR split: raw, training share, and effective
+        (inference counted only up to the demanded footprint)."""
+        night = [s for s in result.metrics.samples if _night(s.t)
+                 and s.capacity > 0]
+        raw = float(np.mean([s.gar for s in night]))
+        train_gar = float(np.mean([s.train_allocated / s.capacity
+                                   for s in night]))
+        eff = []
+        for s in night:
+            demanded = sum(
+                svc.target_replicas(s.t) * svc.gpus_per_replica
+                for svc in services)
+            useful = s.train_allocated + min(s.infer_allocated, demanded)
+            eff.append(useful / s.capacity)
+        return {"raw_gar": raw, "train_gar": train_gar,
+                "effective_gar": float(np.mean(eff))}
+
+    static_night = overnight(static)
+    tidal_night = overnight(tidal)
+
+    # Demand satisfaction: the autoscaler logs its own; the static
+    # peak fleet satisfies by construction once placed.
+    sat_tidal = scaler.satisfaction()
+    sat_static = 1.0
+    print(f"--- tidal autoscaler ({tidal.scale_events} scale decisions, "
+          f"+{scaler.replicas_started}/-{scaler.replicas_retired} "
+          f"replicas, {tidal.preemptions} morning-ramp preemptions)")
+    print(f"    overnight GAR   static: raw {static_night['raw_gar']:.2f}"
+          f" train {static_night['train_gar']:.2f}"
+          f" effective {static_night['effective_gar']:.2f}")
+    print(f"    overnight GAR   tidal : raw {tidal_night['raw_gar']:.2f}"
+          f" train {tidal_night['train_gar']:.2f}"
+          f" effective {tidal_night['effective_gar']:.2f}")
+    print(f"    demand satisfaction: static {sat_static:.3f}  "
+          f"tidal {sat_tidal:.3f}")
+    assert tidal_night["effective_gar"] > static_night["effective_gar"], \
+        "tidal must raise overnight effective GAR"
+    assert tidal_night["train_gar"] > static_night["train_gar"], \
+        "tidal must raise overnight training backfill"
+    assert sat_tidal >= sat_static - 0.05, \
+        f"demand satisfaction regressed: {sat_tidal:.3f}"
+    assert tidal.preemptions > 0, \
+        "morning ramp should exercise the Preempt chain"
+    return {"overnight_static": static_night,
+            "overnight_tidal": tidal_night,
+            "satisfaction": {"static": sat_static, "tidal": sat_tidal},
+            "replicas": {"started": scaler.replicas_started,
+                         "retired": scaler.replicas_retired},
+            "preemptions": tidal.preemptions}
+
+
+# ----------------------------------------------------------------------
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller configs for CI")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the run-wide benchmark seed")
+    args = ap.parse_args(argv)
+    seed = args.seed if args.seed is not None else bench_seed()
+    summary = {
+        "seed": seed,
+        "parity": parity_gate(seed, args.smoke),
+        "checkpoint_restart": goodput_gate(seed, args.smoke),
+        "tidal": tidal_gate(seed, args.smoke),
+    }
+    write_bench_json("dynamics", summary)
+    print("dynamics bench: all gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,10 +3,16 @@
 ``PYTHONPATH=src python -m benchmarks.run`` runs everything except the
 (hour-scale) dry-run sweeps, which are launched separately via
 ``python -m repro.launch.dryrun`` and only *read* here by the roofline
-table."""
+table.
+
+``--seed N`` threads one seed through every stochastic benchmark (via
+``benchmarks.common.bench_seed``), making runs reproducible
+run-to-run; ``--only SUBSTR`` filters modules by name."""
 
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 import traceback
@@ -26,15 +32,35 @@ MODULES = [
     ("§3.4.3  snapshot bench", "benchmarks.snapshot_bench"),
     ("§3.4    sched scale bench", "benchmarks.sched_scale_bench"),
     ("framework plugin bench", "benchmarks.plugin_bench"),
+    ("dynamics bench", "benchmarks.dynamics_bench"),
     ("kernel  node-score bench", "benchmarks.kernel_bench"),
     ("§Roofline table", "benchmarks.roofline"),
 ]
 
 
-def main() -> int:
+def main(argv=None) -> int:
     import importlib
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0,
+                    help="run-wide seed for stochastic benchmarks "
+                         "(exported as REPRO_BENCH_SEED)")
+    ap.add_argument("--only", default="",
+                    help="only run modules whose name contains this")
+    args = ap.parse_args(argv)
+    # Exported BEFORE any benchmark module is imported: modules read it
+    # through benchmarks.common.bench_seed() at main() time.
+    os.environ["REPRO_BENCH_SEED"] = str(args.seed)
+    # The orchestrator's flags are its own: a module whose main() parses
+    # sys.argv (e.g. dynamics_bench's --smoke) must not choke on
+    # --only/--seed, so hide them for the module runs.
+    sys.argv = sys.argv[:1]
     failures = []
-    for title, modname in MODULES:
+    selected = [(t, m) for t, m in MODULES if args.only in m]
+    if not selected:
+        print(f"--only {args.only!r} matches no benchmark module; "
+              f"available: {[m for _, m in MODULES]}")
+        return 2
+    for title, modname in selected:
         print(f"\n================ {title} ({modname})")
         t0 = time.time()
         try:
@@ -49,7 +75,7 @@ def main() -> int:
     if failures:
         print(f"{len(failures)} benchmark(s) failed: {failures}")
         return 1
-    print(f"all {len(MODULES)} benchmarks passed")
+    print(f"all {len(selected)} benchmarks passed (seed {args.seed})")
     return 0
 
 

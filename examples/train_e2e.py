@@ -7,15 +7,23 @@ config -> model init -> data pipeline -> jitted train_step (loss + AdamW)
 lowers under the 256-chip mesh (see ``repro.launch.dryrun``), here run on
 CPU at a ~100M scale.
 
+``--resume`` restarts from the last checkpoint in ``--ckpt``: the
+model-level half of the checkpoint-restart story the scheduler-level
+dynamics subsystem models (``repro.core.dynamics.recovery`` — a killed
+job re-enters the queue with ``original - checkpointed + overhead``
+seconds of work; this driver is where those checkpoints come from).
+
 Usage::
 
     PYTHONPATH=src python examples/train_e2e.py                 # 300 steps
     PYTHONPATH=src python examples/train_e2e.py --steps 20      # quick look
+    PYTHONPATH=src python examples/train_e2e.py --resume        # restart
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -44,6 +52,9 @@ def main() -> None:
     ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the last checkpoint in --ckpt "
+                         "(simulated failure recovery)")
     args = ap.parse_args()
 
     cfg = ARCH_100M
@@ -55,9 +66,25 @@ def main() -> None:
                        AdamWConfig(lr=args.lr, weight_decay=0.01))
     data = synthetic_batches(cfg, DataConfig(batch=args.batch,
                                              seq=args.seq, seed=args.seed))
+    start = 0
+    manifest = os.path.join(args.ckpt, "manifest.json")
+    if args.resume and os.path.exists(manifest):
+        restored = load_checkpoint(args.ckpt)
+        state.params = restored["params"]
+        state.opt_state = restored["opt"]
+        start = int(restored["step"])
+        # Replay the data stream to where the checkpoint left off, so a
+        # resumed run sees the batches the killed run never trained on.
+        for _ in range(start):
+            next(data)
+        print(f"resumed from {args.ckpt} @ step {start} "
+              f"(recomputing nothing, restart overhead only)")
+    elif args.resume:
+        print(f"no checkpoint under {args.ckpt}; starting from scratch")
+
     tokens_per_step = args.batch * args.seq
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(start, args.steps):
         m = state.step(next(data))
         if i % 10 == 0 or i == args.steps - 1:
             dt = time.time() - t0
@@ -75,7 +102,7 @@ def main() -> None:
     first = sum(losses[:k]) / k
     last = sum(losses[-k:]) / k
     print(f"\nmean loss first-{k} {first:.4f} -> last-{k} {last:.4f}")
-    if args.steps >= 50:          # too noisy to assert on a quick look
+    if args.steps - start >= 50:  # too noisy to assert on a quick look
         assert last < first, "training must reduce the loss"
 
     if args.ckpt and args.steps >= args.ckpt_every:

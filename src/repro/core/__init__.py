@@ -1,6 +1,11 @@
-"""Kant's core: cluster model, QSCH, RSCH, plugin framework, simulator."""
+"""Kant's core: cluster model, QSCH, RSCH, plugin framework, simulator,
+cluster dynamics."""
 
 from .cluster import ClusterState
+from .dynamics import (CheckpointModel, ClusterDynamics, DrainWindow,
+                       DynamicsConfig, DynamicsSummary, GpuFailureInjector,
+                       NodeFailureInjector, TidalAutoscaler, TidalService)
+from .events import Event, EventBus, EventKind
 from .framework import (CycleResult, PlacementPass, ProfileSet,
                         SchedulingProfile, default_profiles)
 from .job import (Job, JobKind, JobState, Placement, PodPlacement,
@@ -17,7 +22,8 @@ from .snapshot import (FullSnapshotter, IncrementalSnapshotter, Snapshot,
                        snapshots_equal)
 from .topology import ClusterTopology, small_topology, \
     training_cluster_topology
-from .workload import inference_trace, trace_stats, training_trace
+from .workload import (backfill_training_trace, diurnal_demand,
+                       inference_trace, trace_stats, training_trace)
 
 __all__ = [
     "ClusterState", "Job", "JobKind", "JobState", "Placement",
@@ -29,7 +35,12 @@ __all__ = [
     "SimConfig", "Simulator", "SimResult", "FullSnapshotter",
     "IncrementalSnapshotter", "Snapshot", "snapshots_equal",
     "ClusterTopology", "small_topology", "training_cluster_topology",
-    "inference_trace", "trace_stats", "training_trace",
+    "backfill_training_trace", "diurnal_demand", "inference_trace",
+    "trace_stats", "training_trace",
+    # events + dynamics (full surface in repro.core.dynamics)
+    "Event", "EventBus", "EventKind", "ClusterDynamics", "DynamicsConfig",
+    "DynamicsSummary", "NodeFailureInjector", "GpuFailureInjector",
+    "DrainWindow", "CheckpointModel", "TidalAutoscaler", "TidalService",
     # framework (full surface in repro.core.framework)
     "CycleResult", "PlacementPass", "ProfileSet", "SchedulingProfile",
     "default_profiles", "profiles_from_config",

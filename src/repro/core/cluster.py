@@ -41,11 +41,20 @@ class ClusterState:
     # (n_nodes,) bool: node belongs to the inference dedicated zone
     # (E-Spread, §3.3.4).
     inference_zone: np.ndarray
+    # (n_nodes,) bool: node inside a planned maintenance drain window —
+    # running jobs keep running, but no new placement may land there
+    # (dynamics subsystem; distinct from node_healthy so capacity/GAR
+    # accounting is unaffected by drains).
+    node_draining: Optional[np.ndarray] = None
     # Allocation ledger: job uid -> placement.
     allocations: Dict[int, Placement] = dataclasses.field(default_factory=dict)
     # Nodes whose rows changed since the dirty set was last drained
     # (consumed by the incremental snapshot, §3.4.3).
     dirty_nodes: Set[int] = dataclasses.field(default_factory=set)
+
+    def __post_init__(self) -> None:
+        if self.node_draining is None:
+            self.node_draining = np.zeros(self.topology.n_nodes, dtype=bool)
 
     # ------------------------------------------------------------------
     # Constructors
@@ -106,8 +115,10 @@ class ClusterState:
         return int((self.gpu_busy & mask[:, None]).sum())
 
     def pool_mask(self, gpu_type: int) -> np.ndarray:
-        """Node-pool membership mask (§3.4.1 heterogeneous splitting)."""
-        return (self.gpu_type == gpu_type) & self.node_healthy
+        """Node-pool membership mask (§3.4.1 heterogeneous splitting).
+        Draining nodes are unschedulable, so they leave the pool."""
+        return ((self.gpu_type == gpu_type) & self.node_healthy
+                & ~self.node_draining)
 
     def pool_free(self, gpu_type: int) -> int:
         """Free GPUs inside one GPU-Type-based Node Pool."""
@@ -162,6 +173,8 @@ class ClusterState:
             raise ValueError(f"node {n} out of range")
         if not self.node_healthy[n]:
             raise ValueError(f"node {n} is unhealthy")
+        if self.node_draining[n]:
+            raise ValueError(f"node {n} is draining")
         if self.gpu_type[n] != job.gpu_type:
             raise ValueError(
                 f"node {n} pool {int(self.gpu_type[n])} != job pool "
@@ -191,6 +204,29 @@ class ClusterState:
     def set_node_health(self, node: int, healthy: bool) -> None:
         self.node_healthy[node] = healthy
         self._touch([node])
+
+    def set_drain(self, nodes: Iterable[int], draining: bool) -> None:
+        """Open/close a planned maintenance drain window (dynamics):
+        draining nodes accept no new placements but keep running work."""
+        nodes = [int(n) for n in nodes]
+        self.node_draining[nodes] = draining
+        self._touch(nodes)
+
+    # ------------------------------------------------------------------
+    # Failure-domain queries (dynamics subsystem)
+    # ------------------------------------------------------------------
+    def jobs_on(self, node: int, gpu: Optional[int] = None) -> List[int]:
+        """Job uids with at least one pod on ``node`` (optionally on one
+        specific device) — the blast radius of a NODE_FAIL/GPU_FAIL.
+        Plain ledger scan: failures are rare events, not hot-path."""
+        out: List[int] = []
+        for uid, placement in self.allocations.items():
+            for pod in placement.pods:
+                if pod.node == node and (gpu is None
+                                         or gpu in pod.gpu_indices):
+                    out.append(uid)
+                    break
+        return out
 
     # ------------------------------------------------------------------
     # Invariant check (used by property tests)

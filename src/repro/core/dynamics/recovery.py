@@ -1,0 +1,87 @@
+"""Checkpoint-restart recovery model.
+
+When a failure (or drain eviction) kills a job, the engine asks this
+model what the *next attempt* costs.  The model mirrors the model-level
+checkpointing story (:mod:`repro.ckpt.store`, wired into
+``examples/train_e2e.py``) at scheduler granularity:
+
+* training writes a checkpoint every ``interval_s`` seconds of
+  progress; work since the last checkpoint is recomputed ("lost work");
+* every restart pays ``restart_overhead_s`` up front (restore the
+  checkpoint, rebuild the gang, warm caches);
+* the ``scratch`` baseline never checkpoints: every failure restarts
+  the job from zero — the paper-motivating ablation for
+  ``benchmarks/dynamics_bench.py``;
+* inference/debug pods are stateless services: interrupted serving time
+  is not recomputed, only the restart overhead is paid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from ..job import Job, JobKind
+
+
+@dataclasses.dataclass
+class CheckpointModel:
+    """``mode`` is ``"checkpoint"`` (periodic checkpoints) or
+    ``"scratch"`` (restart from zero)."""
+
+    interval_s: float = 600.0
+    restart_overhead_s: float = 120.0
+    mode: str = "checkpoint"
+
+    def __post_init__(self) -> None:
+        if self.mode not in ("checkpoint", "scratch"):
+            raise ValueError(f"unknown recovery mode {self.mode!r}")
+        if self.interval_s <= 0:
+            raise ValueError("checkpoint interval must be positive")
+
+    # ------------------------------------------------------------------
+    def attempt_overhead(self, job: Job) -> float:
+        """Restore overhead baked into the front of the current attempt
+        (zero for the first run — nothing to restore)."""
+        return self.restart_overhead_s if job.attempt > 0 else 0.0
+
+    def on_interrupt(self, job: Job, t: float
+                     ) -> Tuple[float, float, float]:
+        """Account a kill at time ``t``; returns ``(remaining, lost,
+        overhead)``:
+
+        * ``remaining`` — wall seconds the next attempt needs (work left
+          after the surviving checkpoint, plus restart overhead);
+        * ``lost`` — recompute debt: progress this attempt that no
+          checkpoint captured;
+        * ``overhead`` — the restore cost added to the next attempt.
+
+        Mutates the job's checkpoint bookkeeping
+        (``checkpointed_progress`` / ``lost_work`` /
+        ``restart_overhead``); the caller requeues with ``remaining``.
+        """
+        elapsed = 0.0
+        if job.run_time is not None:
+            # Killed before the container came up -> no progress at all.
+            elapsed = max(0.0, float(t) - job.run_time)
+        progress = max(0.0, elapsed - self.attempt_overhead(job))
+        progress = min(progress,
+                       job.original_duration - job.checkpointed_progress)
+
+        if job.kind is JobKind.TRAIN and self.mode == "checkpoint":
+            saved = (progress // self.interval_s) * self.interval_s
+        elif job.kind is JobKind.TRAIN:   # scratch: all progress redone
+            saved = 0.0
+        else:
+            # Stateless service: serving time is never recomputed.
+            saved = progress
+        lost = progress - saved
+        job.checkpointed_progress = min(
+            job.original_duration, job.checkpointed_progress + saved)
+
+        overhead = self.restart_overhead_s
+        remaining = (job.original_duration - job.checkpointed_progress
+                     + overhead)
+        job.lost_work += lost
+        job.restart_overhead += overhead
+        return remaining, lost, overhead

@@ -21,6 +21,8 @@ Preempt         victim selection for the conservative preemption
                 engine (§3.2.3)
 QueuePolicy     the cycle body: Strict FIFO / Best-Effort / Backfill
                 (Table 1)
+Dynamics        cluster dynamics (failure injection, drain windows,
+                autoscaling) driven through the simulator's event bus
 ==============  ======================================================
 
 **Score plugin contract** — every Score plugin declares whether its term
@@ -48,6 +50,7 @@ from typing import (TYPE_CHECKING, Callable, ClassVar, List, Mapping,
 
 import numpy as np
 
+from ..events import EventKind
 from ..job import Job, JobKind, Placement
 from ..scoring import ScoreWeights
 from ..snapshot import Snapshot
@@ -251,6 +254,41 @@ class QueuePolicyPlugin(Plugin):
 
     def run_cycle(self, queue: List[Job], ctx: CycleContext) -> None:
         raise NotImplementedError
+
+
+class DynamicsPlugin(Plugin):
+    """Cluster-dynamics extension point (the ``DynamicsPolicy`` family).
+
+    Where every other extension point decides *where work goes*, a
+    dynamics plugin decides *what happens to the cluster*: failures,
+    maintenance drains, autoscaling.  Two hooks:
+
+    * :meth:`schedule` — called once at attach time with the
+      :class:`~repro.core.dynamics.engine.ClusterDynamics` engine and a
+      seeded RNG; yields ``(t, EventKind, payload)`` tuples that are
+      pre-seeded onto the simulator's event bus (a reproducible failure
+      trace, drain windows, the autoscaler's first SCALE_DECISION).
+    * :meth:`on_event` — called for every bus event whose kind is in
+      :attr:`handles`; the plugin drives cluster mutations and job
+      submissions through the engine's action helpers (``fail_node``,
+      ``submit_job``, ``retire_job``, ``push`` ...), never by touching
+      ``ClusterState`` directly — that keeps snapshot sync, quota
+      refunds and requeue accounting in one place.
+
+    The built-in NODE_FAIL/NODE_RECOVER/GPU_FAIL/GPU_RECOVER/
+    DRAIN_START/DRAIN_END semantics live in the engine itself, so
+    injector plugins stay declarative trace generators.
+    """
+
+    #: Event kinds routed to :meth:`on_event`.
+    handles: ClassVar[Tuple[EventKind, ...]] = ()
+
+    def schedule(self, engine, rng) -> Sequence[Tuple[float, EventKind,
+                                                      object]]:
+        return ()
+
+    def on_event(self, event, engine) -> None:  # pragma: no cover - hook
+        pass
 
 
 # ----------------------------------------------------------------------

@@ -231,6 +231,8 @@ class BackfillHeadTimeout(PreemptPlugin):
         return v
 
     def execute(self, head: Job, ctx: CycleContext) -> None:
+        if not ctx.sched.structurally_placeable(head, ctx):
+            return  # no eviction set can ever make the head fit
         victims = self.victims(head, ctx)
         pool_free = ctx.state.pool_free(head.gpu_type)
         reclaimable = sum(v.n_gpus for v in victims)

@@ -30,6 +30,7 @@ class JobState(enum.Enum):
     RUNNING = "running"        # bound to devices
     COMPLETED = "completed"
     PREEMPTED = "preempted"    # evicted; will be requeued
+    INTERRUPTED = "interrupted"  # killed by a failure/drain; requeued
     FAILED = "failed"
 
 
@@ -96,6 +97,16 @@ class Job:
     preempt_count: int = 0
     requeue_count: int = 0
     borrowed_quota: int = 0                 # GPUs borrowed via shared quota
+    # Checkpoint-restart bookkeeping (dynamics subsystem).  ``duration``
+    # is the remaining wall time of the CURRENT attempt (the simulator
+    # schedules END from it); ``original_duration`` is the total useful
+    # work the job represents, fixed at construction.
+    original_duration: float = 0.0
+    attempt: int = 0                        # restart attempts so far
+    interrupt_count: int = 0                # failure/drain kills
+    checkpointed_progress: float = 0.0      # work safely persisted (s)
+    lost_work: float = 0.0                  # recompute debt accrued (s)
+    restart_overhead: float = 0.0           # restore overhead accrued (s)
 
     def __post_init__(self) -> None:
         if self.n_pods <= 0 or self.gpus_per_pod <= 0:
@@ -103,6 +114,8 @@ class Job:
         if not self.gang and self.kind == JobKind.TRAIN and self.n_pods > 1:
             # The paper gang-schedules all distributed training (§3.2.1).
             raise ValueError("multi-pod training jobs must be gang jobs")
+        if not self.original_duration:
+            self.original_duration = self.duration
 
     @property
     def n_gpus(self) -> int:

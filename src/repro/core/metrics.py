@@ -1,4 +1,5 @@
-"""The paper's five scheduling metrics (§4): GAR, SOR, GFR, JWTD, JTTED.
+"""The paper's five scheduling metrics (§4): GAR, SOR, GFR, JWTD, JTTED —
+plus the dynamics-subsystem family (goodput, MTTR, restart overhead).
 
 * **GAR** (§4.1) — instantaneous allocated/total GPUs.
 * **SOR** (§4.2) — time-integrated GPU-hours allocated / GPU-hours
@@ -10,6 +11,18 @@
   scheduling-decision time).
 * **JTTED** (§4.5) — per-size NodeNum and NodeNetGroupNum deviation
   ratios vs. the communication-optimal placement.
+
+Dynamics metrics (see ``docs/dynamics.md`` for definitions):
+
+* **goodput** — GPU-seconds of *useful* (completed, non-recomputed)
+  work delivered; ``goodput_fraction`` divides by allocated
+  GPU-seconds, so recompute debt and restart overhead show up as loss;
+* **MTTR** — mean time from an interruption to the rescheduled
+  attempt's scheduling completion;
+* **restart overhead / lost work** — GPU-seconds burned restoring
+  checkpoints and recomputing work since the last checkpoint;
+* **interrupted JTTED** — topology deviation of restarted placements
+  only (do rescheduled gangs land in worse topology?).
 """
 
 from __future__ import annotations
@@ -32,6 +45,11 @@ class Sample:
     allocated: int
     capacity: int
     queue_depth: int
+    # Per-workload breakdown (0 when the caller passes no running set):
+    # lets the tidal benchmarks separate training backfill from
+    # inference fleet allocation in the same GAR series.
+    train_allocated: int = 0
+    infer_allocated: int = 0
 
 
 @dataclasses.dataclass
@@ -40,6 +58,7 @@ class JTTEDEntry:
     n_gpus: int
     node_dev: float       # actual nodes / optimal nodes
     group_dev: float      # actual groups / optimal groups
+    attempt: int = 0      # 0 = first placement, >0 = post-failure restart
 
 
 class MetricsRecorder:
@@ -54,10 +73,16 @@ class MetricsRecorder:
         self._last_cap: int = 0
         self._gpu_seconds_alloc: float = 0.0
         self._gpu_seconds_cap: float = 0.0
+        # Dynamics accounting.
+        self._interrupted_at: Dict[int, float] = {}   # uid -> kill time
+        self.mttr_samples: List[float] = []
+        self.useful_gpu_seconds: float = 0.0          # completed work
+        self.lost_gpu_seconds: float = 0.0            # recompute debt
+        self.overhead_gpu_seconds: float = 0.0        # restart overhead
 
     # ------------------------------------------------------------------
-    def sample(self, t: float, state: ClusterState, queue_depth: int = 0
-               ) -> Sample:
+    def sample(self, t: float, state: ClusterState, queue_depth: int = 0,
+               running: Optional[Dict[int, Job]] = None) -> Sample:
         cap = state.total_allocatable()
         alloc = state.total_allocated()
         healthy_nodes = int(state.node_healthy.sum())
@@ -73,13 +98,27 @@ class MetricsRecorder:
                 self._gpu_seconds_alloc += self._last_alloc * dt
                 self._gpu_seconds_cap += self._last_cap * dt
         self._last_t, self._last_alloc, self._last_cap = t, alloc, cap
+        train_alloc = infer_alloc = 0
+        if running:
+            for j in running.values():
+                if j.kind is JobKind.INFER:
+                    infer_alloc += j.n_gpus
+                else:
+                    train_alloc += j.n_gpus
         s = Sample(t=t, gar=gar, gfr=gfr, allocated=alloc, capacity=cap,
-                   queue_depth=queue_depth)
+                   queue_depth=queue_depth, train_allocated=train_alloc,
+                   infer_allocated=infer_alloc)
         self.samples.append(s)
         return s
 
-    def on_job_placed(self, job: Job) -> None:
-        """Record JTTED deviation ratios at placement time (§4.5)."""
+    def on_job_placed(self, job: Job, now: Optional[float] = None) -> None:
+        """Record JTTED deviation ratios at placement time (§4.5) and,
+        for post-interruption restarts, the MTTR sample."""
+        t_int = self._interrupted_at.pop(job.uid, None)
+        if t_int is not None:
+            t = now if now is not None else job.start_time
+            if t is not None:
+                self.mttr_samples.append(float(t) - t_int)
         if job.placement is None or job.kind is not JobKind.TRAIN:
             return
         topo = self.topology
@@ -91,10 +130,23 @@ class MetricsRecorder:
         self.jtted.append(JTTEDEntry(
             uid=job.uid, n_gpus=job.n_gpus,
             node_dev=actual_nodes / max(1, opt_nodes),
-            group_dev=actual_groups / max(1, opt_groups)))
+            group_dev=actual_groups / max(1, opt_groups),
+            attempt=job.attempt))
 
     def on_job_finished(self, job: Job) -> None:
         self._finished.append(job)
+        # Completed jobs delivered their full useful work, whatever got
+        # recomputed along the way.
+        self.useful_gpu_seconds += job.original_duration * job.n_gpus
+
+    def on_job_interrupted(self, job: Job, t: float, lost_work: float,
+                           overhead: float) -> None:
+        """A failure/drain killed the job at ``t``: ``lost_work`` seconds
+        since its last checkpoint must be recomputed and ``overhead``
+        seconds of restore cost were added to the next attempt."""
+        self._interrupted_at[job.uid] = float(t)
+        self.lost_gpu_seconds += max(0.0, lost_work) * job.n_gpus
+        self.overhead_gpu_seconds += max(0.0, overhead) * job.n_gpus
 
     # ------------------------------------------------------------------
     # Aggregates
@@ -148,12 +200,35 @@ class MetricsRecorder:
 
     def jtted_by_bucket(self) -> Dict[str, Tuple[float, float]]:
         """Mean (node_dev, group_dev) per size bucket (§4.5)."""
+        return self._jtted_acc(self.jtted)
+
+    def interrupted_jtted_by_bucket(self) -> Dict[str, Tuple[float, float]]:
+        """§4.5 deviation ratios restricted to restarted placements —
+        the checkpoint-restart path's topology-quality check."""
+        return self._jtted_acc([e for e in self.jtted if e.attempt > 0])
+
+    @staticmethod
+    def _jtted_acc(entries: Sequence[JTTEDEntry]
+                   ) -> Dict[str, Tuple[float, float]]:
         acc: Dict[str, List[JTTEDEntry]] = {}
-        for e in self.jtted:
+        for e in entries:
             acc.setdefault(size_bucket(e.n_gpus), []).append(e)
         return {b: (float(np.mean([e.node_dev for e in v])),
                     float(np.mean([e.group_dev for e in v])))
                 for b, v in acc.items()}
+
+    # -- dynamics aggregates -------------------------------------------
+    def mttr(self) -> float:
+        """Mean time from interruption to rescheduled placement (s)."""
+        return float(np.mean(self.mttr_samples)) if self.mttr_samples \
+            else 0.0
+
+    def goodput_fraction(self) -> float:
+        """Useful GPU-seconds / allocated GPU-seconds: 1.0 means no
+        recompute debt, no restart overhead, no abandoned work."""
+        if self._gpu_seconds_alloc <= 0:
+            return 0.0
+        return self.useful_gpu_seconds / self._gpu_seconds_alloc
 
     def report(self) -> Dict[str, object]:
         return {
@@ -163,4 +238,10 @@ class MetricsRecorder:
             "jwtd_mean": self.jwtd(),
             "jwtd_max": self.jwtd_max(),
             "jtted": self.jtted_by_bucket(),
+            "goodput_gpu_seconds": self.useful_gpu_seconds,
+            "goodput_fraction": self.goodput_fraction(),
+            "mttr": self.mttr(),
+            "lost_gpu_seconds": self.lost_gpu_seconds,
+            "overhead_gpu_seconds": self.overhead_gpu_seconds,
+            "interrupted_jtted": self.interrupted_jtted_by_bucket(),
         }

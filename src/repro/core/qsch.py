@@ -96,6 +96,9 @@ class QSCH:
         self.running: Dict[int, Job] = {}
         # Head-of-line blocking bookkeeping for Backfill.
         self.head_blocked_since: Dict[int, float] = {}
+        # The cycle's working snapshot, held only while ``cycle`` runs —
+        # the target of mid-cycle health syncs (see ``sync_health``).
+        self._working_snap = None
 
     # ------------------------------------------------------------------
     # Profiles
@@ -154,31 +157,50 @@ class QSCH:
     def cycle(self, state: ClusterState, now: float) -> CycleResult:
         result = CycleResult()
         snap = self.snapshotter.take(state)
+        self._working_snap = snap
         result.snapshot_version = snap.version
         ctx = CycleContext(running=self.running, quota=self.quota,
                            sched=self, rsch=self.rsch, state=state,
                            snap=snap, now=now, result=result)
-        candidates = self.pending_jobs()
-        # Jobs failing static quota stay in the tenant queue and never
-        # enter the global pass (§3.2.2).
-        global_queue = []
-        for job in candidates:
-            if self.static_admit(job, ctx):
-                global_queue.append(job)
-            else:
-                result.admit_rejected += 1
-        if not global_queue:
+        try:
+            candidates = self.pending_jobs()
+            # Jobs failing static quota stay in the tenant queue and never
+            # enter the global pass (§3.2.2).
+            global_queue = []
+            for job in candidates:
+                if self.static_admit(job, ctx):
+                    global_queue.append(job)
+                else:
+                    result.admit_rejected += 1
+            if not global_queue:
+                return result
+
+            self.queue_policy.run_cycle(global_queue, ctx)
+
+            # Preempt chain (§3.2.3): if the highest-priority pending job
+            # is still blocked, conservatively evict work that provably
+            # unblocks it (priority first, then quota reclamation).
+            if (self.config.priority_preemption and result.blocked_head
+                    is not None):
+                self._run_preempt_chain(result.blocked_head, ctx)
             return result
+        finally:
+            self._working_snap = None
 
-        self.queue_policy.run_cycle(global_queue, ctx)
+    def sync_health(self, state: ClusterState, nodes) -> None:
+        """Mirror an external health/drain mutation onto the scheduler's
+        snapshot view.  Two staleness windows exist:
 
-        # Preempt chain (§3.2.3): if the highest-priority pending job is
-        # still blocked, conservatively evict work that provably
-        # unblocks it (priority first, then quota reclamation).
-        if (self.config.priority_preemption and result.blocked_head
-                is not None):
-            self._run_preempt_chain(result.blocked_head, ctx)
-        return result
+        * *mid-cycle*: the working snapshot took its copy before the
+          mutation — refresh its rows and drop the delta-invariant
+          caches (pool masks, healthy-capacity counts), or this cycle's
+          later binds can land on a dead/draining node;
+        * *between cycles* with incremental snapshots: the retained
+          buffer is refreshed from ``state.dirty_nodes`` at the next
+          ``take`` — nothing to do here.
+        """
+        if self._working_snap is not None:
+            self._working_snap.apply_health(state, nodes)
 
     # ------------------------------------------------------------------
     # Placement attempt: admission -> RSCH -> Reserve/Permit -> bind
@@ -251,6 +273,24 @@ class QSCH:
         job.state = JobState.COMPLETED
         job.end_time = now
 
+    def on_interrupted(self, job: Job, state: ClusterState, now: float,
+                       remaining: float) -> None:
+        """Requeue-on-failure (§3.2.4 applied to the dynamics
+        subsystem): a job killed by a node/GPU failure or drain eviction
+        releases its devices, refunds quota, and re-enters its tenant
+        queue with ``remaining`` seconds of work (computed by the
+        recovery model from its checkpoint state)."""
+        if job.uid in self.running:
+            state.release(job.uid)
+            self.quota.refund(job)
+            del self.running[job.uid]
+        job.state = JobState.INTERRUPTED
+        job.interrupt_count += 1
+        job.attempt += 1
+        job.duration = max(0.0, float(remaining))
+        job.end_time = None
+        self.requeue(job)
+
     def preempt_job(self, job: Job, ctx: CycleContext) -> None:
         """Evict one running job and requeue it (used by the preemption
         engine and the Preempt plugins)."""
@@ -266,11 +306,24 @@ class QSCH:
         ctx.result.requeues += 1
 
     # -- conservative preemption engine (§3.2.3) --------------------------
+    def structurally_placeable(self, job: Job, ctx: CycleContext) -> bool:
+        """Could the job fit even on an EMPTY pool?  Guards the
+        preemption engine: the free+reclaimable dry-run is blind to
+        per-node granularity, so a pod larger than any node's healthy
+        capacity (or a gang wider than the pool's total slots) would
+        trigger a futile eviction storm every cycle — victims die, the
+        beneficiary stays blocked, repeat."""
+        pool = ctx.snap.candidate_pool(int(job.gpu_type))
+        slots = ctx.snap.healthy_per_node() // job.gpus_per_pod
+        return int(slots[pool].sum()) >= job.n_pods
+
     def _run_preempt_chain(self, job: Job, ctx: CycleContext) -> None:
         """First Preempt plugin with victims wins; evictions only happen
         when the dry-run shows they can make ``job`` feasible.  A plugin
         without victims gets its ``execute`` hook instead (execute-only
         plugins own their whole flow, including placement)."""
+        if not self.structurally_placeable(job, ctx):
+            return
         victims: List[Job] = []
         for plugin in self.profile_for(job).preempt:
             victims = plugin.victims(job, ctx)

@@ -215,7 +215,10 @@ class RSCH:
                 pool = pool & np.asarray(f.mask(job, snap, zone),
                                          dtype=bool)
         else:
-            pool = np.ones(snap.free_gpus.shape[0], dtype=bool)
+            # Drain windows are structural, like the zone selector: a
+            # draining node must never be placed on, even by a custom
+            # Filter chain that dropped the default HealthFilter.
+            pool = ~snap.node_draining
             for f in filters:
                 pool = pool & np.asarray(f.mask(job, snap, zone),
                                          dtype=bool)

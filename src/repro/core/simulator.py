@@ -1,11 +1,20 @@
 """Discrete-event cluster simulator driving QSCH + RSCH.
 
-Event kinds:
+The loop is an :class:`~repro.core.events.EventBus` (see that module for
+the determinism contract).  Built-in event kinds:
 
 * ``SUBMIT``  — a job arrives and enters its tenant queue;
 * ``TICK``    — a scheduling cycle fires (QSCH admission -> RSCH placement
   -> binding);
-* ``END``     — a running job completes and releases devices.
+* ``END``     — a running job completes and releases devices;
+* ``SAMPLE``  — metrics sampling.
+
+The dynamics subsystem (:mod:`repro.core.dynamics`) subscribes the
+remaining kinds (NODE_FAIL, NODE_RECOVER, GPU_FAIL/RECOVER,
+DRAIN_START/END, SCALE_DECISION) when ``SimConfig.dynamics`` is set;
+with it unset the event stream — and therefore every placement and
+metric — is identical to the pre-bus simulator (asserted by
+``benchmarks/dynamics_bench.py``).
 
 Binding latency (image pull, container start — §4.2) is modeled as a
 constant delay between scheduling completion and Running, but GPU-hours
@@ -15,15 +24,16 @@ accrue from scheduling completion per the SOR definition.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 
 from .cluster import ClusterState
+from .events import Event, EventBus, EventKind
 from .job import Job, JobState
 from .metrics import MetricsRecorder
 from .qsch import QSCH, CycleResult
-from .quota import QuotaManager, QuotaMode
+
+if TYPE_CHECKING:  # dynamics imports stay lazy — see run()
+    from .dynamics.engine import ClusterDynamics, DynamicsConfig
 
 
 @dataclasses.dataclass
@@ -32,6 +42,9 @@ class SimConfig:
     sample_interval: float = 300.0     # metric sampling period (s)
     binding_latency: float = 45.0      # schedule->running delay (s)
     horizon: Optional[float] = None    # stop time; default: drain
+    # Cluster dynamics (failures, drains, autoscaling); None = static
+    # cluster, byte-identical to the pre-dynamics simulator.
+    dynamics: Optional["DynamicsConfig"] = None
 
 
 @dataclasses.dataclass
@@ -47,9 +60,13 @@ class SimResult:
     admit_rejected: int = 0
     infeasible: int = 0
     requeues: int = 0
-
-
-_SUBMIT, _END, _TICK, _SAMPLE = 0, 1, 2, 3
+    # Dynamics accounting (zero on static runs); the engine's summary
+    # object carries the detailed per-event breakdown.
+    failures: int = 0
+    interrupts: int = 0
+    drains: int = 0
+    scale_events: int = 0
+    dynamics: Optional[object] = None
 
 
 class Simulator:
@@ -59,80 +76,115 @@ class Simulator:
         self.qsch = qsch
         self.config = config or SimConfig()
         self.metrics = MetricsRecorder(state.topology)
-        self._heap: List = []
-        self._seq = itertools.count()
-        # Count of SUBMIT events still in the heap — keeps the "anything
-        # left to schedule?" check O(1) instead of an O(heap) scan per
-        # tick/sample event.
-        self._pending_submissions = 0
+        self.bus = EventBus()
+        self.now = 0.0
+        self.cycles = 0
+        self.preemptions = 0
+        self.admit_rejected = 0
+        self.infeasible = 0
+        self.requeues = 0
+        # job uid -> authoritative END time; a preempted/interrupted
+        # job's stale END event must be ignored (the rescheduled run
+        # pushes a fresh one).
+        self.pending_ends: Dict[int, float] = {}
+        self._register_builtins()
 
-    def _push(self, t: float, kind: int, payload=None) -> None:
-        if kind == _SUBMIT:
-            self._pending_submissions += 1
-        heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
+    # ------------------------------------------------------------------
+    # Built-in handlers
+    # ------------------------------------------------------------------
+    def _register_builtins(self) -> None:
+        self.bus.subscribe(EventKind.SUBMIT, self._on_submit)
+        self.bus.subscribe(EventKind.END, self._on_end)
+        self.bus.subscribe(EventKind.TICK, self._on_tick)
+        self.bus.subscribe(EventKind.SAMPLE, self._on_sample)
 
+    def _on_submit(self, ev: Event) -> None:
+        self.qsch.submit(ev.payload)
+
+    def _on_end(self, ev: Event) -> None:
+        job = ev.payload
+        if (job.state is JobState.RUNNING
+                and self.pending_ends.get(job.uid) == ev.t):
+            self.pending_ends.pop(job.uid, None)
+            self.qsch.on_complete(job, self.state, ev.t)
+            self.metrics.on_job_finished(job)
+
+    def _on_tick(self, ev: Event) -> None:
+        cfg = self.config
+        result = self.qsch.cycle(self.state, ev.t)
+        self.cycles += 1
+        self.preemptions += len(result.preempted)
+        self.admit_rejected += result.admit_rejected
+        self.infeasible += result.infeasible
+        self.requeues += result.requeues
+        for job in result.scheduled:
+            self.metrics.on_job_placed(job, now=ev.t)
+            job.run_time = ev.t + cfg.binding_latency
+            end = job.run_time + job.duration
+            self.pending_ends[job.uid] = end
+            self.bus.push(end, EventKind.END, job)
+        # Keep ticking while anything is queued or running.
+        if self._work_outstanding():
+            self.bus.push(ev.t + cfg.tick_interval, EventKind.TICK)
+
+    def _on_sample(self, ev: Event) -> None:
+        self.metrics.sample(ev.t, self.state, self.qsch.queue_depth(),
+                            running=self.qsch.running)
+        if self._work_outstanding():
+            self.bus.push(ev.t + self.config.sample_interval,
+                          EventKind.SAMPLE)
+
+    def _work_outstanding(self) -> bool:
+        return bool(self.qsch.queue_depth() or self.qsch.running
+                    or self.bus.pending(EventKind.SUBMIT))
+
+    # ------------------------------------------------------------------
+    # Revival hooks (dynamics): a failure or scale decision can create
+    # work after the TICK/SAMPLE chains died out — restart them without
+    # ever double-scheduling (the per-kind pending counters are O(1)).
+    # ------------------------------------------------------------------
+    def ensure_tick(self, t: float) -> None:
+        if self.bus.pending(EventKind.TICK) == 0:
+            self.bus.push(t, EventKind.TICK)
+
+    def ensure_sample(self, t: float) -> None:
+        if self.bus.pending(EventKind.SAMPLE) == 0:
+            self.bus.push(t, EventKind.SAMPLE)
+
+    # ------------------------------------------------------------------
     def run(self, jobs: Sequence[Job]) -> SimResult:
         cfg = self.config
+        engine: Optional["ClusterDynamics"] = None
+        if cfg.dynamics is not None:
+            from .dynamics.engine import ClusterDynamics
+            engine = ClusterDynamics(cfg.dynamics)
+            engine.attach(self)
         jobs = sorted(jobs, key=lambda j: j.submit_time)
         for j in jobs:
-            self._push(j.submit_time, _SUBMIT, j)
+            self.bus.push(j.submit_time, EventKind.SUBMIT, j)
         if jobs:
             t0 = jobs[0].submit_time
-            self._push(t0, _TICK)
-            self._push(t0, _SAMPLE)
-        now = 0.0
-        cycles = 0
-        preemptions = 0
-        admit_rejected = 0
-        infeasible = 0
-        requeues = 0
-        pending_ends: Dict[int, float] = {}
+            self.bus.push(t0, EventKind.TICK)
+            self.bus.push(t0, EventKind.SAMPLE)
+        elif engine is not None and len(self.bus):
+            # Dynamics-only run (e.g. a pure autoscaler scenario): the
+            # engine seeded events; give metrics a t=0 anchor.
+            self.bus.push(0.0, EventKind.SAMPLE)
 
-        while self._heap:
-            now, kind, _, payload = heapq.heappop(self._heap)
-            if kind == _SUBMIT:
-                self._pending_submissions -= 1
-            if cfg.horizon is not None and now > cfg.horizon:
+        while len(self.bus):
+            ev = self.bus.pop()
+            if cfg.horizon is not None and ev.t > cfg.horizon:
                 break
-            if kind == _SUBMIT:
-                self.qsch.submit(payload)
-            elif kind == _END:
-                job = payload
-                # A preempted job's stale END event must be ignored; the
-                # rescheduled run pushes a fresh one.
-                if (job.state is JobState.RUNNING
-                        and pending_ends.get(job.uid) == now):
-                    self.qsch.on_complete(job, self.state, now)
-                    self.metrics.on_job_finished(job)
-            elif kind == _TICK:
-                result = self.qsch.cycle(self.state, now)
-                cycles += 1
-                preemptions += len(result.preempted)
-                admit_rejected += result.admit_rejected
-                infeasible += result.infeasible
-                requeues += result.requeues
-                for job in result.scheduled:
-                    self.metrics.on_job_placed(job)
-                    job.run_time = now + cfg.binding_latency
-                    end = job.run_time + job.duration
-                    pending_ends[job.uid] = end
-                    self._push(end, _END, job)
-                # Keep ticking while anything is queued or running.
-                if self.qsch.queue_depth() or self.qsch.running \
-                        or self._has_future_submissions():
-                    self._push(now + cfg.tick_interval, _TICK)
-            elif kind == _SAMPLE:
-                self.metrics.sample(now, self.state,
-                                    self.qsch.queue_depth())
-                if self.qsch.queue_depth() or self.qsch.running \
-                        or self._has_future_submissions():
-                    self._push(now + cfg.sample_interval, _SAMPLE)
-        self.metrics.sample(now, self.state, self.qsch.queue_depth())
-        return SimResult(jobs=list(jobs), metrics=self.metrics,
-                         end_time=now, cycles=cycles,
-                         preemptions=preemptions,
-                         admit_rejected=admit_rejected,
-                         infeasible=infeasible, requeues=requeues)
-
-    def _has_future_submissions(self) -> bool:
-        return self._pending_submissions > 0
+            self.now = ev.t
+            self.bus.dispatch(ev)
+        self.metrics.sample(self.now, self.state, self.qsch.queue_depth(),
+                            running=self.qsch.running)
+        result = SimResult(jobs=list(jobs), metrics=self.metrics,
+                           end_time=self.now, cycles=self.cycles,
+                           preemptions=self.preemptions,
+                           admit_rejected=self.admit_rejected,
+                           infeasible=self.infeasible,
+                           requeues=self.requeues)
+        if engine is not None:
+            engine.finalize(result)
+        return result

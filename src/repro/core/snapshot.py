@@ -39,6 +39,7 @@ class Snapshot:
     node_healthy: np.ndarray    # (n_nodes,) bool
     gpu_type: np.ndarray        # (n_nodes,) int32
     inference_zone: np.ndarray  # (n_nodes,) bool
+    node_draining: Optional[np.ndarray] = None  # (n_nodes,) bool
     version: int = 0
     # Lazy healthy-device count per node; placement deltas never change
     # health, so it survives a whole cycle's worth of schedule calls.
@@ -54,6 +55,11 @@ class Snapshot:
     # that depends on free/used/busy.
     derived: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+
+    def __post_init__(self) -> None:
+        if self.node_draining is None:
+            self.node_draining = np.zeros(self.node_healthy.shape,
+                                          dtype=bool)
 
     def healthy_per_node(self) -> np.ndarray:
         """(n_nodes,) healthy device count, cached across schedule calls."""
@@ -71,7 +77,8 @@ class Snapshot:
         key = (int(gpu_type), zone)
         mask = self._pool_cache.get(key)
         if mask is None:
-            mask = (self.gpu_type == gpu_type) & self.node_healthy
+            mask = ((self.gpu_type == gpu_type) & self.node_healthy
+                    & ~self.node_draining)
             if zone == "zone":
                 mask = mask & self.inference_zone
             elif zone == "general":
@@ -100,6 +107,28 @@ class Snapshot:
         for pod in placement.pods:
             self.gpu_busy[pod.node, list(pod.gpu_indices)] = False
         self._refresh_rows(placement.nodes)
+
+    def apply_health(self, state: "ClusterState",
+                     nodes: Iterable[int]) -> None:
+        """Mirror a mid-cycle health/drain mutation of the live state.
+
+        Unlike placement deltas, health changes are NOT delta-invariant:
+        the cached §3.4.1 pool masks and every ``derived`` array (e.g.
+        per-group healthy capacity) key on health, so they must be
+        dropped — otherwise a NODE_FAIL landing between ``take`` and a
+        later bind in the same cycle can place onto a dead node.
+        """
+        idx = np.unique(np.fromiter((int(n) for n in nodes),
+                                    dtype=np.int64))
+        if idx.size == 0:
+            return
+        self.gpu_busy[idx] = state.gpu_busy[idx]
+        self.gpu_healthy[idx] = state.gpu_healthy[idx]
+        self.node_healthy[idx] = state.node_healthy[idx]
+        self.node_draining[idx] = state.node_draining[idx]
+        self.gpu_type[idx] = state.gpu_type[idx]
+        self._refresh_rows(idx)
+        self.invalidate_caches()
 
     def _refresh_rows(self, nodes: Iterable[int]) -> None:
         idx = np.unique(np.fromiter((int(n) for n in nodes),
@@ -131,6 +160,7 @@ class FullSnapshotter:
             node_healthy=state.node_healthy.copy(),
             gpu_type=state.gpu_type.copy(),
             inference_zone=state.inference_zone.copy(),
+            node_draining=state.node_draining.copy(),
             version=self._version,
         )
 
@@ -174,6 +204,7 @@ class IncrementalSnapshotter:
             snap.node_healthy[idx] = state.node_healthy[idx]
             snap.gpu_type[idx] = state.gpu_type[idx]
             snap.inference_zone[idx] = state.inference_zone[idx]
+            snap.node_draining[idx] = state.node_draining[idx]
             # Refreshed rows may change health/type -> cached pool masks
             # and derived arrays are stale.
             snap.invalidate_caches()
@@ -190,4 +221,5 @@ def snapshots_equal(a: Snapshot, b: Snapshot) -> bool:
             and np.array_equal(a.gpu_healthy, b.gpu_healthy)
             and np.array_equal(a.node_healthy, b.node_healthy)
             and np.array_equal(a.gpu_type, b.gpu_type)
-            and np.array_equal(a.inference_zone, b.inference_zone))
+            and np.array_equal(a.inference_zone, b.inference_zone)
+            and np.array_equal(a.node_draining, b.node_draining))

@@ -134,6 +134,56 @@ def inference_trace(n_jobs: int, *, seed: int = 0,
     return jobs
 
 
+DAY_S = 86_400.0
+
+
+def diurnal_demand(t: float, base: float, peak: float,
+                   period: float = DAY_S,
+                   peak_hour: float = 14.0) -> float:
+    """Smooth diurnal (tidal) demand curve.
+
+    Raised cosine over one ``period``: ``peak`` at ``peak_hour`` (in
+    hours from the period start), falling to ``base`` half a period
+    away.  This is the demand signal the tidal autoscaler tracks —
+    inference traffic that crests mid-afternoon and bottoms out
+    overnight (§2 "inference services" diurnal load; the reclaimed
+    night capacity backfills training).
+    """
+    frac = (t % period) / period
+    x = np.cos(2.0 * np.pi * (frac - peak_hour * 3600.0 / period))
+    return float(base + (peak - base) * (x + 1.0) / 2.0)
+
+
+def backfill_training_trace(n_jobs: int, *, seed: int = 0,
+                            sizes: Sequence[int] = (8, 16, 32, 64),
+                            size_probs: Sequence[float] = (.3, .3, .25,
+                                                           .15),
+                            duration_range_h: Tuple[float, float] = (3.0,
+                                                                     5.0),
+                            submit_window_s: float = 3600.0,
+                            gpus_per_node: int = 8,
+                            gpu_type: int = 0,
+                            tenant: str = "batch",
+                            start_uid: int = 500_000) -> List[Job]:
+    """Low-priority, preemptible training backlog for tidal scenarios:
+    chunky jobs submitted inside one window, deep enough to soak up
+    whatever the tide hands back overnight and be preempted away at the
+    morning ramp (exercising PriorityPreempt)."""
+    rng = np.random.default_rng(seed)
+    lo_h, hi_h = duration_range_h
+    jobs: List[Job] = []
+    for i in range(n_jobs):
+        n_gpus = int(rng.choice(list(sizes), p=list(size_probs)))
+        n_pods, per_pod = _pods_for(max(n_gpus, 1), gpus_per_node)
+        jobs.append(Job(
+            uid=start_uid + i, tenant=tenant, gpu_type=gpu_type,
+            n_pods=n_pods, gpus_per_pod=per_pod,
+            priority=PRIO_LOW, preemptible=True,
+            submit_time=float(rng.uniform(0.0, submit_window_s)),
+            duration=float(rng.uniform(lo_h, hi_h)) * 3600.0))
+    return jobs
+
+
 def trace_stats(jobs: Sequence[Job]) -> TraceStats:
     by_size: Dict[int, int] = {}
     gpu_time: Dict[int, float] = {}

@@ -61,3 +61,63 @@ def test_inference_trace_properties():
     assert all(not j.gang for j in jobs)
     assert all(j.kind.value == "infer" for j in jobs)
     assert {j.gpu_type for j in jobs} == {0, 1}
+
+
+# ----------------------------------------------------------------------
+# Horizon edge cases
+# ----------------------------------------------------------------------
+def _one_job(duration, submit=0.0):
+    from repro.core import Job
+    return Job(uid=1, tenant="t0", gpu_type=0, n_pods=1, gpus_per_pod=8,
+               submit_time=submit, duration=duration)
+
+
+def test_job_still_running_at_horizon(topo, state):
+    sim = _sim(topo, state)
+    sim.config.horizon = 1000.0
+    job = _one_job(duration=5000.0)
+    result = sim.run([job])
+    assert job.state.value == "running", \
+        "the horizon truncates observation, it does not kill jobs"
+    assert job.end_time is None
+    assert state.total_allocated() == job.n_gpus
+    assert result.end_time <= 1000.0
+    assert all(s.t <= 1000.0 for s in result.metrics.samples)
+    state.check_invariants()
+
+
+def test_sample_exactly_on_horizon_boundary(topo, state):
+    # sample_interval=120 from t0=0: a SAMPLE lands exactly at t=1200.
+    # Events AT the horizon are processed; only strictly-later ones drop.
+    sim = _sim(topo, state)
+    sim.config.horizon = 1200.0
+    result = sim.run([_one_job(duration=5000.0)])
+    assert any(s.t == 1200.0 for s in result.metrics.samples)
+    assert all(s.t <= 1200.0 for s in result.metrics.samples)
+
+
+def test_end_exactly_on_horizon_boundary(topo, state):
+    # binding_latency=10 -> END fires exactly at 10 + duration.
+    sim = _sim(topo, state)
+    sim.config.horizon = 1010.0
+    job = _one_job(duration=1000.0)
+    sim.run([job])
+    assert job.state.value == "completed"
+    assert job.end_time == 1010.0
+    assert state.total_allocated() == 0
+
+
+def test_drain_window_open_across_horizon(topo, state):
+    # DRAIN_END past the horizon: the run exits mid-window, cleanly.
+    from repro.core import DrainWindow, DynamicsConfig
+    sim = _sim(topo, state)
+    sim.config.horizon = 2000.0
+    sim.config.dynamics = DynamicsConfig(plugins=[
+        DrainWindow(nodes=range(8), start=500.0, duration=10_000.0)])
+    job = _one_job(duration=300.0)
+    result = sim.run([job])
+    assert job.state.value == "completed"
+    assert state.node_draining[:8].all(), \
+        "window still open when observation stopped"
+    assert result.drains == 1
+    state.check_invariants()
