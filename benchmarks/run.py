@@ -7,7 +7,9 @@ table.
 
 ``--seed N`` threads one seed through every stochastic benchmark (via
 ``benchmarks.common.bench_seed``), making runs reproducible
-run-to-run; ``--only SUBSTR`` filters modules by name."""
+run-to-run; ``--only SUBSTR`` filters modules by name; ``--list``
+prints the registered benchmark names and exits (the names ``--only``
+matches against)."""
 
 from __future__ import annotations
 
@@ -33,6 +35,7 @@ MODULES = [
     ("§3.4    sched scale bench", "benchmarks.sched_scale_bench"),
     ("framework plugin bench", "benchmarks.plugin_bench"),
     ("dynamics bench", "benchmarks.dynamics_bench"),
+    ("federation bench", "benchmarks.federation_bench"),
     ("kernel  node-score bench", "benchmarks.kernel_bench"),
     ("§Roofline table", "benchmarks.roofline"),
 ]
@@ -46,7 +49,13 @@ def main(argv=None) -> int:
                          "(exported as REPRO_BENCH_SEED)")
     ap.add_argument("--only", default="",
                     help="only run modules whose name contains this")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered benchmark names and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for title, modname in MODULES:
+            print(f"{modname:40s} {title}")
+        return 0
     # Exported BEFORE any benchmark module is imported: modules read it
     # through benchmarks.common.bench_seed() at main() time.
     os.environ["REPRO_BENCH_SEED"] = str(args.seed)

@@ -1,11 +1,14 @@
 """Kant's core: cluster model, QSCH, RSCH, plugin framework, simulator,
-cluster dynamics."""
+cluster dynamics, federation."""
 
 from .cluster import ClusterState
 from .dynamics import (CheckpointModel, ClusterDynamics, DrainWindow,
                        DynamicsConfig, DynamicsSummary, GpuFailureInjector,
                        NodeFailureInjector, TidalAutoscaler, TidalService)
 from .events import Event, EventBus, EventKind
+from .federation import (FederatedCluster, FederatedResult,
+                         FederatedSimulator, FederationSummary, GSCH,
+                         GSCHConfig, MemberCluster, make_member)
 from .framework import (CycleResult, PlacementPass, ProfileSet,
                         SchedulingProfile, default_profiles)
 from .job import (Job, JobKind, JobState, Placement, PodPlacement,
@@ -44,4 +47,8 @@ __all__ = [
     # framework (full surface in repro.core.framework)
     "CycleResult", "PlacementPass", "ProfileSet", "SchedulingProfile",
     "default_profiles", "profiles_from_config",
+    # federation (full surface in repro.core.federation)
+    "FederatedCluster", "FederatedResult", "FederatedSimulator",
+    "FederationSummary", "GSCH", "GSCHConfig", "MemberCluster",
+    "make_member",
 ]

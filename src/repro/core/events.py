@@ -94,6 +94,11 @@ class EventBus:
         self._pending[ev.kind] -= 1
         return ev
 
+    def peek(self) -> Optional[Event]:
+        """Next event without removing it (the federated lockstep loop
+        merges member buses by peeking every head)."""
+        return self._heap[0] if self._heap else None
+
     def pending(self, kind: EventKind) -> int:
         return self._pending.get(kind, 0)
 

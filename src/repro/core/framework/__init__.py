@@ -18,12 +18,12 @@ See ``docs/plugins.md`` for the extension-point contract and a worked
 "write your own Score plugin" example.
 """
 
-from .api import (AdmitPlugin, CycleContext, CycleResult, DynamicsPlugin,
-                  FilterPlugin, PermitPlugin, PlacementPass, Plugin,
-                  PostBindPlugin, PreemptPlugin, ProfileSet,
-                  QueuePolicyPlugin, QueueSortPlugin, ReservePlugin,
-                  SchedulingContext, SchedulingProfile, ScorePlugin,
-                  single_pass_plan)
+from .api import (AdmitPlugin, ClusterSelectPlugin, CycleContext,
+                  CycleResult, DynamicsPlugin, FilterPlugin, PermitPlugin,
+                  PlacementPass, Plugin, PostBindPlugin, PreemptPlugin,
+                  ProfileSet, QueuePolicyPlugin, QueueSortPlugin,
+                  ReservePlugin, SchedulingContext, SchedulingProfile,
+                  ScorePlugin, single_pass_plan)
 from .builtin import (BackfillHeadTimeout, BackfillPolicy,
                       BestEffortFIFOPolicy, BinpackScore, ColocateBonus,
                       DefaultQueueSort, DynamicFeasibility, GpuTypeFilter,
@@ -41,7 +41,7 @@ __all__ = [
     "Plugin", "QueueSortPlugin", "AdmitPlugin", "FilterPlugin",
     "ScorePlugin", "ReservePlugin", "PermitPlugin", "PostBindPlugin",
     "PreemptPlugin", "QueuePolicyPlugin", "DynamicsPlugin",
-    "PlacementPass",
+    "ClusterSelectPlugin", "PlacementPass",
     "SchedulingProfile", "ProfileSet", "SchedulingContext", "CycleContext",
     "CycleResult", "single_pass_plan",
     # registry

@@ -23,6 +23,9 @@ QueuePolicy     the cycle body: Strict FIFO / Best-Effort / Backfill
                 (Table 1)
 Dynamics        cluster dynamics (failure injection, drain windows,
                 autoscaling) driven through the simulator's event bus
+ClusterSelect   federation-level routing (repro.core.federation): which
+                member cluster a job lands in, vectorized over the
+                per-cluster summary matrix
 ==============  ======================================================
 
 **Score plugin contract** — every Score plugin declares whether its term
@@ -289,6 +292,34 @@ class DynamicsPlugin(Plugin):
 
     def on_event(self, event, engine) -> None:  # pragma: no cover - hook
         pass
+
+
+class ClusterSelectPlugin(Plugin):
+    """Federation routing extension point (GSCH,
+    :mod:`repro.core.federation`): decides which *member cluster* a job
+    is forwarded to, the level above the per-cluster QSCH/RSCH pipeline.
+
+    Both hooks are vectorized over the federation's per-cluster summary
+    matrix (:class:`~repro.core.federation.summary.FederationSummary`):
+    free GPUs per (member, pool), leaf-group headroom, queue depth,
+    pending gang backlog, cost/capability tables.  A routing decision
+    must stay O(members) — plugins read the summary, they never walk a
+    member's node arrays.
+
+    * :meth:`feasible` — boolean mask over members; ``None`` abstains.
+      The GSCH ANDs all plugin masks onto the structural-fit mask (pool
+      exists, a pod fits on one node).  If the chain vetoes every
+      member, the GSCH falls back to structural fit so a veto can delay
+      but never strand a job.
+    * :meth:`score` — additive float term over members; higher wins.
+      Ties break toward the lower member index (determinism).
+    """
+
+    def feasible(self, job: Job, summary) -> Optional[np.ndarray]:
+        return None
+
+    def score(self, job: Job, summary) -> Optional[np.ndarray]:
+        return None
 
 
 # ----------------------------------------------------------------------

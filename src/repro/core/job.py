@@ -85,6 +85,11 @@ class Job:
     submit_time: float = 0.0
     duration: float = 3600.0
     preemptible: bool = True
+    # Home region of the job's tenant/data (federation subsystem): the
+    # GSCH locality plugin prefers member clusters in this region, and
+    # cross-region forwarding pays the locality penalty.  None = no
+    # affinity (single-cluster runs never look at it).
+    region: Optional[str] = None
 
     # Mutable scheduling bookkeeping -----------------------------------
     state: JobState = JobState.PENDING

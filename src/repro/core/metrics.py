@@ -175,6 +175,12 @@ class MetricsRecorder:
             return 0.0
         return self._gpu_seconds_alloc / self._gpu_seconds_cap
 
+    def gpu_seconds(self) -> Tuple[float, float]:
+        """(allocated, capacity) GPU-seconds accumulated so far — the
+        SOR numerator/denominator, exposed so a federation can compute
+        the global SOR as Σalloc / Σcap across member recorders."""
+        return self._gpu_seconds_alloc, self._gpu_seconds_cap
+
     def jwtd(self, jobs: Optional[Sequence[Job]] = None
              ) -> Dict[str, float]:
         """Mean waiting time per size bucket (§4.4)."""

@@ -24,7 +24,7 @@ accrue from scheduling completion per the SOR definition.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Sequence
 
 from .cluster import ClusterState
 from .events import Event, EventBus, EventKind
@@ -87,6 +87,12 @@ class Simulator:
         # job's stale END event must be ignored (the rescheduled run
         # pushes a fresh one).
         self.pending_ends: Dict[int, float] = {}
+        # Extra work-outstanding predicate for federated drivers: jobs
+        # not yet routed to this member live outside the bus, so the
+        # TICK/SAMPLE chains must not die while the federation still has
+        # arrivals or in-flight forwards (None = standalone, unchanged).
+        self.external_work: Optional[Callable[[], bool]] = None
+        self._engine: Optional["ClusterDynamics"] = None
         self._register_builtins()
 
     # ------------------------------------------------------------------
@@ -136,7 +142,9 @@ class Simulator:
 
     def _work_outstanding(self) -> bool:
         return bool(self.qsch.queue_depth() or self.qsch.running
-                    or self.bus.pending(EventKind.SUBMIT))
+                    or self.bus.pending(EventKind.SUBMIT)
+                    or (self.external_work is not None
+                        and self.external_work()))
 
     # ------------------------------------------------------------------
     # Revival hooks (dynamics): a failure or scale decision can create
@@ -152,13 +160,22 @@ class Simulator:
             self.bus.push(t, EventKind.SAMPLE)
 
     # ------------------------------------------------------------------
-    def run(self, jobs: Sequence[Job]) -> SimResult:
-        cfg = self.config
-        engine: Optional["ClusterDynamics"] = None
-        if cfg.dynamics is not None:
+    # Run = prime + event loop + finalize.  The pieces are public so a
+    # federated driver (repro.core.federation) can prime members, merge
+    # their buses in ONE lockstep loop, and finalize each — a standalone
+    # ``run`` stays byte-identical to the pre-split implementation.
+    # ------------------------------------------------------------------
+    def attach_dynamics(self) -> None:
+        """Instantiate and attach the dynamics engine (idempotent)."""
+        if self.config.dynamics is not None and self._engine is None:
             from .dynamics.engine import ClusterDynamics
-            engine = ClusterDynamics(cfg.dynamics)
-            engine.attach(self)
+            self._engine = ClusterDynamics(self.config.dynamics)
+            self._engine.attach(self)
+
+    def prime(self, jobs: Sequence[Job]) -> List[Job]:
+        """Attach dynamics, enqueue submissions, start the TICK/SAMPLE
+        chains.  Returns the submit-time-sorted job list."""
+        self.attach_dynamics()
         jobs = sorted(jobs, key=lambda j: j.submit_time)
         for j in jobs:
             self.bus.push(j.submit_time, EventKind.SUBMIT, j)
@@ -166,17 +183,14 @@ class Simulator:
             t0 = jobs[0].submit_time
             self.bus.push(t0, EventKind.TICK)
             self.bus.push(t0, EventKind.SAMPLE)
-        elif engine is not None and len(self.bus):
+        elif self._engine is not None and len(self.bus):
             # Dynamics-only run (e.g. a pure autoscaler scenario): the
             # engine seeded events; give metrics a t=0 anchor.
             self.bus.push(0.0, EventKind.SAMPLE)
+        return list(jobs)
 
-        while len(self.bus):
-            ev = self.bus.pop()
-            if cfg.horizon is not None and ev.t > cfg.horizon:
-                break
-            self.now = ev.t
-            self.bus.dispatch(ev)
+    def finalize(self, jobs: Sequence[Job]) -> SimResult:
+        """Closing metrics sample + result assembly."""
         self.metrics.sample(self.now, self.state, self.qsch.queue_depth(),
                             running=self.qsch.running)
         result = SimResult(jobs=list(jobs), metrics=self.metrics,
@@ -185,6 +199,17 @@ class Simulator:
                            admit_rejected=self.admit_rejected,
                            infeasible=self.infeasible,
                            requeues=self.requeues)
-        if engine is not None:
-            engine.finalize(result)
+        if self._engine is not None:
+            self._engine.finalize(result)
         return result
+
+    def run(self, jobs: Sequence[Job]) -> SimResult:
+        cfg = self.config
+        jobs = self.prime(jobs)
+        while len(self.bus):
+            ev = self.bus.pop()
+            if cfg.horizon is not None and ev.t > cfg.horizon:
+                break
+            self.now = ev.t
+            self.bus.dispatch(ev)
+        return self.finalize(jobs)

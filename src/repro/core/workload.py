@@ -71,14 +71,34 @@ def training_trace(n_jobs: int, *, seed: int = 0,
                    mean_duration_s: float = 7200.0,
                    gpus_per_node: int = 8,
                    gpu_type: int = 0,
+                   gpu_types: Optional[Sequence[int]] = None,
+                   type_probs: Optional[Sequence[float]] = None,
                    tenants: Sequence[str] = ("t0",),
+                   tenant_regions: Optional[Dict[str, str]] = None,
                    start_uid: int = 0) -> List[Job]:
-    """Poisson arrivals with the §5.1.1 size/duration population."""
+    """Poisson arrivals with the §5.1.1 size/duration population.
+
+    ``gpu_types`` (mirroring ``inference_trace``) samples each job's GPU
+    model from a mix — optionally weighted by ``type_probs`` — instead of
+    pinning the whole trace to one ``gpu_type``; heterogeneous-pool and
+    federation scenarios need mixed traces without hand-building them.
+    Types draw from a rng derived from ``seed`` so the base population
+    (sizes, arrivals, durations, tenants) is identical to the
+    homogeneous trace with the same seed — heterogeneity A/Bs compare
+    the SAME jobs.  ``tenant_regions`` stamps each job's home region
+    from its tenant (multi-region tenancy for the federation GSCH).
+    Both default to off and leave existing seeded traces untouched.
+    """
     rng = np.random.default_rng(seed)
+    type_rng = np.random.default_rng([seed, 0x67747970])  # "ggtyp"
     sizes = np.asarray([s for s, _, _ in TRAIN_SIZE_TABLE])
     probs = np.asarray([p for _, p, _ in TRAIN_SIZE_TABLE])
     probs = probs / probs.sum()
     dur_scale = {s: d for s, _, d in TRAIN_SIZE_TABLE}
+    tprobs = None
+    if gpu_types is not None and type_probs is not None:
+        tprobs = np.asarray(list(type_probs), dtype=float)
+        tprobs = tprobs / tprobs.sum()
     inter = rng.exponential(3600.0 / arrival_rate_per_hour, size=n_jobs)
     arrivals = np.cumsum(inter)
     jobs: List[Job] = []
@@ -88,10 +108,15 @@ def training_trace(n_jobs: int, *, seed: int = 0,
         duration = float(rng.exponential(
             mean_duration_s * dur_scale[n_gpus]))
         duration = max(60.0, duration)
+        tenant = str(rng.choice(list(tenants)))
+        if gpu_types is not None:
+            jtype = int(type_rng.choice(list(gpu_types), p=tprobs))
+        else:
+            jtype = gpu_type
         jobs.append(Job(
             uid=start_uid + i,
-            tenant=str(rng.choice(list(tenants))),
-            gpu_type=gpu_type,
+            tenant=tenant,
+            gpu_type=jtype,
             n_pods=n_pods,
             gpus_per_pod=per_pod,
             kind=JobKind.TRAIN,
@@ -99,6 +124,7 @@ def training_trace(n_jobs: int, *, seed: int = 0,
             priority=PRIO_NORMAL,
             submit_time=float(arrivals[i]),
             duration=duration,
+            region=(tenant_regions or {}).get(tenant),
         ))
     return jobs
 
@@ -108,6 +134,7 @@ def inference_trace(n_jobs: int, *, seed: int = 0,
                     mean_duration_s: float = 4 * 3600.0,
                     gpu_types: Sequence[int] = (0,),
                     tenants: Sequence[str] = ("t0", "t1", "t2"),
+                    tenant_regions: Optional[Dict[str, str]] = None,
                     max_replicas: int = 4,
                     start_uid: int = 100_000) -> List[Job]:
     """§5.2 inference fleets: small per-replica pods, several replicas,
@@ -119,9 +146,11 @@ def inference_trace(n_jobs: int, *, seed: int = 0,
     for i in range(n_jobs):
         per_pod = int(rng.choice([1, 1, 2, 2, 4, 8]))
         replicas = int(rng.integers(1, max_replicas + 1))
+        tenant = str(rng.choice(list(tenants)))
         jobs.append(Job(
             uid=start_uid + i,
-            tenant=str(rng.choice(list(tenants))),
+            tenant=tenant,
+            region=(tenant_regions or {}).get(tenant),
             gpu_type=int(rng.choice(list(gpu_types))),
             n_pods=replicas,
             gpus_per_pod=per_pod,

@@ -1,0 +1,330 @@
+"""Federation subsystem: summary matrix, ClusterSelect routing, GSCH
+spillover, federation quotas, lockstep simulation, single-member parity,
+and the heterogeneous-trace workload support it rides on."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterState, DynamicsConfig, FederatedCluster,
+                        FederatedSimulator, GSCHConfig, Job, JobKind,
+                        NodeFailureInjector, QSCH, QSCHConfig, QueuePolicy,
+                        QuotaManager, QuotaMode, RSCH, RSCHConfig,
+                        SimConfig, Simulator, Strategy, make_member,
+                        training_trace)
+from repro.core.federation import (CapabilityCostSelect, GfrAwareSelect,
+                                   GSCH, LeastLoadedSelect,
+                                   LocalityAffinitySelect, QuotaFitSelect,
+                                   jain_index, summarize,
+                                   waiting_percentile)
+from repro.core.job import JobState, Placement, PodPlacement
+
+
+def _job(uid=0, gpus=4, gpu_type=0, tenant="t0", region=None, pods=None,
+         submit=0.0, duration=600.0, priority=50):
+    n_pods = pods if pods is not None else 1
+    per_pod = gpus // n_pods
+    return Job(uid=uid, tenant=tenant, gpu_type=gpu_type, n_pods=n_pods,
+               gpus_per_pod=per_pod, submit_time=submit,
+               duration=duration, region=region, priority=priority)
+
+
+def _two_members(**kw):
+    return FederatedCluster([
+        make_member("a", gpu_pools=((0, 4),), region="r0", **kw),
+        make_member("b", gpu_pools=((0, 4), (1, 4)), region="r1", **kw),
+    ])
+
+
+# ----------------------------------------------------------------------
+# Summary matrix
+# ----------------------------------------------------------------------
+class TestSummary:
+    def test_matrix_shapes_and_pools(self):
+        fed = _two_members()
+        s = summarize(fed.members, 0.0)
+        assert s.gpu_types == [0, 1]
+        assert s.free.shape == (2, 2)
+        # member a hosts no type-1 pool.
+        assert s.capacity[0, 1] == 0
+        assert s.capacity[0, 0] == 4 * 8
+        assert s.capacity[1, 0] == 4 * 8 and s.capacity[1, 1] == 4 * 8
+        assert s.max_node_cap[0, 0] == 8
+
+    def test_structural_vs_immediate_fit(self):
+        fed = _two_members()
+        s = summarize(fed.members, 0.0)
+        j = _job(gpus=16, pods=2)            # 2 pods x 8 GPUs
+        assert s.structural_fit(j).tolist() == [True, True]
+        assert s.structural_fit(_job(gpus=8, gpu_type=1)).tolist() == \
+            [False, True]
+        # Committing routing charges flips immediate fit without a walk.
+        big = _job(gpus=32, pods=4)
+        assert s.immediate_fit(big).tolist() == [True, True]
+        s.commit(0, _job(uid=1, gpus=8))
+        assert s.immediate_fit(big).tolist() == [False, True]
+        assert s.structural_fit(big).tolist() == [True, True]
+
+    def test_queue_depth_and_pending_gangs(self):
+        fed = _two_members()
+        fed[0].qsch.submit(_job(uid=1, gpus=8))
+        fed[0].qsch.submit(_job(uid=2, gpus=16, pods=2))
+        s = summarize(fed.members, 0.0)
+        assert s.queue_depth.tolist() == [2, 0]
+        assert s.pending_gang_gpus.tolist() == [24, 0]
+
+    def test_unknown_gpu_type_never_fits(self):
+        fed = _two_members()
+        s = summarize(fed.members, 0.0)
+        assert not s.structural_fit(_job(gpu_type=7)).any()
+
+
+# ----------------------------------------------------------------------
+# ClusterSelect plugins + GSCH selection
+# ----------------------------------------------------------------------
+class TestRouting:
+    def test_least_loaded_prefers_emptier_member(self):
+        fed = _two_members()
+        # Load member a: allocate half its pool directly.
+        st = fed[0].state
+        st.allocate(_job(uid=9, gpus=8), Placement(pods=[
+            PodPlacement(node=0, gpu_indices=tuple(range(8)))]))
+        gsch = GSCH(fed, GSCHConfig(select=(LeastLoadedSelect(),),
+                                    immediate_fit_bonus=0.0))
+        assert gsch.route(_job(uid=1, gpus=4), 0.0) == 1
+
+    def test_locality_prefers_home_region(self):
+        fed = _two_members()
+        gsch = GSCH(fed, GSCHConfig(
+            select=(LocalityAffinitySelect(weight=5.0),),
+            immediate_fit_bonus=0.0))
+        assert gsch.route(_job(uid=1, region="r1"), 0.0) == 1
+        assert gsch.route(_job(uid=2, region="r0"), 0.0) == 0
+        # No region: indifferent -> lowest index wins ties.
+        assert gsch.route(_job(uid=3), 0.0) == 0
+
+    def test_capability_cost_routes_to_cheapest(self):
+        fed = FederatedCluster([
+            make_member("pricey", gpu_pools=((0, 4),),
+                        cost_per_gpu_hour={0: 4.0}, capability={0: 1.0}),
+            make_member("cheap", gpu_pools=((0, 4),),
+                        cost_per_gpu_hour={0: 1.0}, capability={0: 1.0}),
+        ])
+        gsch = GSCH(fed, GSCHConfig(select=(CapabilityCostSelect(),),
+                                    immediate_fit_bonus=0.0))
+        assert gsch.route(_job(uid=1), 0.0) == 1
+        # A capability floor vetoes the cheap member.
+        fed[1].capability[0] = 0.2
+        gsch2 = GSCH(fed, GSCHConfig(
+            select=(CapabilityCostSelect(min_capability=0.5),),
+            immediate_fit_bonus=0.0))
+        assert gsch2.route(_job(uid=2), 0.0) == 0
+
+    def test_quota_fit_vetoes_non_admitting_member(self):
+        fed = FederatedCluster([
+            make_member("a", gpu_pools=((0, 4),), tenants=("alice",)),
+            make_member("b", gpu_pools=((0, 4),), tenants=("bob",)),
+        ])
+        gsch = GSCH(fed, GSCHConfig(select=(QuotaFitSelect(),),
+                                    immediate_fit_bonus=0.0))
+        assert gsch.route(_job(uid=1, tenant="bob"), 0.0) == 1
+        assert gsch.route(_job(uid=2, tenant="alice"), 0.0) == 0
+
+    def test_gfr_aware_sign_by_job_shape(self):
+        fed = _two_members()
+        s = summarize(fed.members, 0.0)
+        s.frag = np.asarray([0.5, 0.1])
+        plug = GfrAwareSelect(weight=1.0)
+        small = plug.score(_job(gpus=2), s)
+        gang = plug.score(_job(gpus=32, pods=4), s)
+        assert small[0] > small[1]          # fill fragmented member
+        assert gang[0] < gang[1]            # keep gangs away from frag
+
+    def test_structural_misfit_parks_at_biggest_pool(self):
+        fed = _two_members()
+        gsch = GSCH(fed, GSCHConfig())
+        # 96 GPUs of type 1 exist only at b (32 healthy) -> nothing fits
+        # structurally; the job parks at the biggest type-1 pool (b).
+        assert gsch.route(_job(uid=1, gpus=96, pods=12, gpu_type=1),
+                          0.0) == 1
+
+    def test_routing_is_o_members_per_job(self):
+        fed = _two_members()
+        gsch = GSCH(fed, GSCHConfig(summary_max_age_s=15.0))
+        for i in range(50):
+            gsch.route(_job(uid=i, gpus=1), float(i) * 0.1)
+        # 5s of arrivals, 15s staleness window -> one walk, not 50.
+        assert gsch.stats.summary_refreshes == 1
+
+
+# ----------------------------------------------------------------------
+# Federated simulation: lockstep, spillover, quotas, dynamics
+# ----------------------------------------------------------------------
+class TestFederatedSimulator:
+    def test_routes_and_completes_across_members(self):
+        fed = _two_members()
+        jobs = [_job(uid=i, gpus=8, submit=float(i)) for i in range(8)]
+        res = FederatedSimulator(fed).run(jobs)
+        assert all(j.state is JobState.COMPLETED for j in res.jobs)
+        assert sum(res.routing.routed) == 8
+        # Least-loaded + immediate-fit spreads across both members.
+        assert all(n > 0 for n in res.routing.routed)
+        assert res.report()["balance_index"] > 0.8
+
+    def test_spillover_rescues_starving_job(self):
+        fed = _two_members()
+        cfg = GSCHConfig(
+            select=(LocalityAffinitySelect(weight=100.0),),
+            immediate_fit_bonus=0.0,
+            spill_deadline_s=120.0, forward_delay_s=30.0,
+            locality_penalty_s=60.0)
+        # Home member a (32 GPUs) is pinned by a long resident job; the
+        # next r0 job must spill to b to run before the first finishes.
+        blocker = _job(uid=1, gpus=32, pods=4, region="r0",
+                       duration=20_000.0)
+        starver = _job(uid=2, gpus=8, region="r0", submit=10.0,
+                       duration=600.0)
+        res = FederatedSimulator(fed, cfg).run([blocker, starver])
+        assert res.spills == 1
+        assert res.routing.cross_region_forwards == 1
+        assert starver.state is JobState.COMPLETED
+        # It ran on member b (type-0 pool nodes there), after deadline +
+        # forward delay + cross-region penalty.
+        assert res.members[1].jobs == [starver]
+        assert starver.start_time >= 120.0 + 30.0 + 60.0
+        assert starver.end_time < blocker.end_time
+
+    def test_no_spillover_when_disabled(self):
+        fed = _two_members()
+        cfg = GSCHConfig(
+            select=(LocalityAffinitySelect(weight=100.0),),
+            immediate_fit_bonus=0.0, spillover=False)
+        blocker = _job(uid=1, gpus=32, pods=4, region="r0",
+                       duration=20_000.0)
+        starver = _job(uid=2, gpus=8, region="r0", submit=10.0,
+                       duration=600.0)
+        res = FederatedSimulator(fed, cfg, horizon=30_000.0).run(
+            [blocker, starver])
+        assert res.spills == 0
+        assert starver.start_time > blocker.end_time - 1.0
+
+    def test_federation_quota_backlog_layered_over_members(self):
+        fed = _two_members()
+        fq = QuotaManager({"t0": {0: 8}})
+        cfg = GSCHConfig(federation_quota=fq)
+        first = _job(uid=1, gpus=8, duration=600.0)
+        second = _job(uid=2, gpus=8, submit=1.0, duration=600.0)
+        res = FederatedSimulator(fed, cfg).run([first, second])
+        # Both complete, but the second was held by the global grant
+        # until the first finished — member quotas alone allow 10^6.
+        assert res.routing.backlogged == 1
+        assert all(j.state is JobState.COMPLETED for j in res.jobs)
+        assert second.start_time >= first.end_time
+        assert fq.total_used(0) == 0     # refunds observed on END
+
+    def test_lockstep_samples_align_while_loaded(self):
+        fed = _two_members()
+        jobs = [_job(uid=i, gpus=4, submit=1.0 + i, duration=2000.0)
+                for i in range(6)]
+        res = FederatedSimulator(fed).run(jobs)
+        t0 = [s.t for s in res.members[0].metrics.samples]
+        t1 = [s.t for s in res.members[1].metrics.samples]
+        # Chains start together at the first arrival on both members.
+        assert t0[0] == t1[0] == 1.0
+        shared = min(len(t0), len(t1)) - 1   # final samples may differ
+        assert t0[:shared] == t1[:shared]
+
+    def test_member_dynamics_compose(self):
+        members = [
+            make_member("a", gpu_pools=((0, 4),)),
+            make_member("b", gpu_pools=((0, 4),),
+                        sim_config=SimConfig(dynamics=DynamicsConfig(
+                            plugins=[NodeFailureInjector(
+                                mtbf_s=1800.0, repair_s=600.0)],
+                            seed=1))),
+        ]
+        fed = FederatedCluster(members)
+        jobs = [_job(uid=i, gpus=8, submit=float(i), duration=4000.0)
+                for i in range(8)]
+        res = FederatedSimulator(fed, horizon=6 * 3600.0).run(jobs)
+        # Failures hit member b only; member a's report has none.
+        assert res.members[1].failures > 0
+        assert res.members[0].failures == 0
+
+    def test_jain_index(self):
+        assert jain_index([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+        assert jain_index([1.0, 0.0, 0.0]) == pytest.approx(1 / 3)
+        assert jain_index([]) == 1.0
+
+    def test_waiting_percentile(self):
+        jobs = [_job(uid=i) for i in range(10)]
+        for i, j in enumerate(jobs):
+            j.start_time = float(i)
+        assert waiting_percentile(jobs, 90.0) == pytest.approx(8.1)
+
+
+# ----------------------------------------------------------------------
+# Single-member degenerate case == plain Simulator
+# ----------------------------------------------------------------------
+def _placement_fp(jobs):
+    return [(j.uid, j.start_time, j.end_time,
+             tuple((p.node, p.gpu_indices)
+                   for p in (j.placement.pods if j.placement else ())))
+            for j in jobs]
+
+
+@pytest.mark.parametrize("policy", [QueuePolicy.BACKFILL,
+                                    QueuePolicy.STRICT_FIFO])
+def test_single_member_parity(policy):
+    jobs = training_trace(60, seed=11, arrival_rate_per_hour=600,
+                          mean_duration_s=1500.0)
+    jobs = [j for j in jobs if j.n_gpus <= 64]
+
+    member = make_member("solo", gpu_pools=((0, 16),), nodes_per_leaf=4,
+                         policy=policy)
+    topo = member.topology
+    state = ClusterState.create(topo)
+    qm = QuotaManager({"t0": {0: 10 ** 6}})
+    qsch = QSCH(qm, RSCH(topo, RSCHConfig()), QSCHConfig(policy=policy))
+    base = Simulator(state, qsch, SimConfig()).run(
+        [Job(uid=j.uid, tenant=j.tenant, gpu_type=j.gpu_type,
+             n_pods=j.n_pods, gpus_per_pod=j.gpus_per_pod,
+             submit_time=j.submit_time, duration=j.duration)
+         for j in jobs])
+    fedres = FederatedSimulator(FederatedCluster([member])).run(
+        [Job(uid=j.uid, tenant=j.tenant, gpu_type=j.gpu_type,
+             n_pods=j.n_pods, gpus_per_pod=j.gpus_per_pod,
+             submit_time=j.submit_time, duration=j.duration)
+         for j in jobs])
+    assert _placement_fp(base.jobs) == _placement_fp(fedres.jobs)
+    assert base.metrics.report() == fedres.members[0].metrics.report()
+
+
+# ----------------------------------------------------------------------
+# Workload satellite: heterogeneous + multi-region traces
+# ----------------------------------------------------------------------
+class TestHeterogeneousTrace:
+    def test_gpu_types_mix(self):
+        jobs = training_trace(300, seed=2, gpu_types=(0, 1, 3),
+                              type_probs=(0.5, 0.3, 0.2))
+        seen = {j.gpu_type for j in jobs}
+        assert seen == {0, 1, 3}
+        frac0 = sum(j.gpu_type == 0 for j in jobs) / len(jobs)
+        assert 0.35 < frac0 < 0.65
+
+    def test_default_stream_unchanged_by_new_knobs(self):
+        base = training_trace(50, seed=7)
+        hetero = training_trace(50, seed=7, gpu_types=(0, 1))
+        # Same sizes, arrivals, durations, tenants — types draw from a
+        # derived rng so heterogeneity A/Bs compare the same jobs.
+        for a, b in zip(base, hetero):
+            assert (a.n_pods, a.gpus_per_pod, a.submit_time, a.duration,
+                    a.tenant) == (b.n_pods, b.gpus_per_pod,
+                                  b.submit_time, b.duration, b.tenant)
+        assert all(j.gpu_type == 0 for j in base)
+
+    def test_tenant_regions_stamped(self):
+        jobs = training_trace(40, seed=3, tenants=("x", "y"),
+                              tenant_regions={"x": "r0", "y": "r1"})
+        assert all(j.region == {"x": "r0", "y": "r1"}[j.tenant]
+                   for j in jobs)
+        assert all(j.region is None for j in training_trace(5, seed=3))

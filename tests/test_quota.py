@@ -65,3 +65,93 @@ def test_charge_over_quota_raises():
     qm = QuotaManager({"a": {0: 4}})
     with pytest.raises(ValueError):
         qm.charge(_job(gpus=8))
+
+
+# ----------------------------------------------------------------------
+# Shared-mode edge cases
+# ----------------------------------------------------------------------
+def test_refund_of_partially_borrowed_job():
+    """A job satisfied partly from own quota, partly borrowed: its
+    refund must return BOTH shares, and a sibling borrow by the same
+    tenant must survive the other job's refund untouched."""
+    qm = QuotaManager({"a": {0: 8}, "b": {0: 16}}, mode=QuotaMode.SHARED)
+    j1 = _job(uid=1, gpus=6)         # within own quota, no borrow
+    j2 = _job(uid=2, gpus=6)         # 2 own + 4 borrowed
+    qm.charge(j1)
+    qm.charge(j2)
+    assert j1.borrowed_quota == 0
+    assert j2.borrowed_quota == 4
+    assert qm.borrows[("a", 0)] == 4
+    # Refund the fully-owned job first: the borrow ledger is untouched.
+    qm.refund(j1)
+    assert qm.borrows[("a", 0)] == 4
+    assert qm.tenant_used("a", 0) == 6
+    # Refund the borrower: ledger entry fully cleared.
+    qm.refund(j2)
+    assert qm.tenant_used("a", 0) == 0
+    assert not qm.borrows
+    assert j2.borrowed_quota == 0
+
+
+def test_sibling_borrows_partial_ledger_refund():
+    """Two borrowing jobs of one tenant: refunding one leaves exactly
+    the other's borrowed share in the ledger."""
+    qm = QuotaManager({"a": {0: 8}, "b": {0: 16}}, mode=QuotaMode.SHARED)
+    j1 = _job(uid=1, gpus=10)        # 8 own + 2 borrowed
+    j2 = _job(uid=2, gpus=6)         # all 6 borrowed
+    qm.charge(j1)
+    qm.charge(j2)
+    assert (j1.borrowed_quota, j2.borrowed_quota) == (2, 6)
+    assert qm.borrows[("a", 0)] == 8
+    qm.refund(j1)
+    assert qm.borrows[("a", 0)] == 6
+    assert qm.tenant_used("a", 0) == 6
+    qm.refund(j2)
+    assert not qm.borrows and qm.tenant_used("a", 0) == 0
+
+
+def test_borrows_split_across_gpu_types():
+    """Borrowing is per GPU-type pool: loans in one pool must not leak
+    into another pool's ledger, admission, or reclamation."""
+    qm = QuotaManager({"a": {0: 4, 1: 4}, "b": {0: 8, 1: 8}},
+                      mode=QuotaMode.SHARED)
+    j0 = _job(uid=1, gpus=8, gpu_type=0)    # borrows 4 of type 0
+    j1 = _job(uid=2, gpus=10, gpu_type=1)   # borrows 6 of type 1
+    qm.charge(j0)
+    qm.charge(j1)
+    assert qm.borrows == {("a", 0): 4, ("a", 1): 6}
+    # Further borrows by `a` are bounded per pool: type 0 has 4 left
+    # (12 total - 8 used), type 1 only 2 (12 - 10).
+    assert qm.can_admit(_job(uid=3, gpus=4, gpu_type=0))
+    assert not qm.can_admit(_job(uid=4, gpus=3, gpu_type=1))
+    # Reclamation is pool-scoped: b reclaiming type 1 sees only j1.
+    assert qm.reclaim_candidates("b", 1, [j0, j1]) == [j1]
+    assert qm.reclaim_candidates("b", 0, [j0, j1]) == [j0]
+    # Refunding the type-0 borrow leaves the type-1 ledger intact.
+    qm.refund(j0)
+    assert qm.borrows == {("a", 1): 6}
+
+
+def test_reclaim_ordering_two_borrowers_same_owner():
+    """Two tenants borrowing from the same exhausted pool: reclamation
+    victims order by priority first, then most-recently-started, so the
+    owner claws back the cheapest work first."""
+    qm = QuotaManager({"a": {0: 4}, "b": {0: 4}, "owner": {0: 8}},
+                      mode=QuotaMode.SHARED)
+    ja = _job(uid=1, tenant="a", gpus=8)    # borrows 4
+    jb = _job(uid=2, tenant="b", gpus=8)    # borrows 4
+    qm.charge(ja)
+    qm.charge(jb)
+    ja.start_time, jb.start_time = 100.0, 200.0
+    ja.priority = jb.priority = 50
+    # Same priority: the most recently started borrower goes first.
+    assert qm.reclaim_candidates("owner", 0, [ja, jb]) == [jb, ja]
+    # Lower priority outranks recency.
+    ja.priority = 10
+    assert qm.reclaim_candidates("owner", 0, [ja, jb]) == [ja, jb]
+    # A non-preemptible borrower is never a victim.
+    ja.preemptible = False
+    assert qm.reclaim_candidates("owner", 0, [ja, jb]) == [jb]
+    # Once the owner's own quota is exhausted, nothing to reclaim.
+    qm.charge(_job(uid=3, tenant="owner", gpus=8))
+    assert qm.reclaim_candidates("owner", 0, [ja, jb]) == []
