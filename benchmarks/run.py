@@ -36,6 +36,7 @@ MODULES = [
     ("framework plugin bench", "benchmarks.plugin_bench"),
     ("dynamics bench", "benchmarks.dynamics_bench"),
     ("federation bench", "benchmarks.federation_bench"),
+    ("serving fabric bench", "benchmarks.serving_bench"),
     ("kernel  node-score bench", "benchmarks.kernel_bench"),
     ("§Roofline table", "benchmarks.roofline"),
 ]

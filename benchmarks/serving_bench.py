@@ -1,0 +1,209 @@
+"""Serving-fabric benchmark: routing policies, per-slot prefill, demand.
+
+Three gates, each asserting one acceptance criterion of the serving
+tier (see docs/serving.md):
+
+1. **Routing** — on the diurnal+bursty mixed-class request trace, the
+   ECCOS-style :class:`CapabilityCostRouter` achieves LOWER total cost
+   at EQUAL-OR-BETTER SLO attainment than both load-only baselines
+   (round-robin, least-loaded), for every seed in the matrix.
+2. **Per-slot prefill** — the continuous-batching engine prefills each
+   admitted request exactly once (prefill calls == admits, prefill
+   tokens == sum of prompt lengths) and its outputs are independent of
+   batch co-residents (staggered run == solo B=1 references); the
+   legacy whole-batch shim re-prefills residents (strictly more
+   prefill tokens for the same request set).
+3. **Demand export** — the pool's observed request load round-trips
+   into a TidalService whose replica target tracks the trace's peak
+   vs trough.
+
+Writes ``BENCH_serving.json`` (uploaded as a CI artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/serving_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import bench_seed, write_bench_json  # noqa: E402
+from repro.core.workload import request_trace  # noqa: E402
+from repro.serve import (CapabilityCostRouter, LeastLoadedRouter,  # noqa: E402
+                         ReplicaPool, ReplicaSpec, RoundRobinRouter,
+                         demand_service)
+
+PERIOD_S = 1800.0               # one compressed diurnal cycle
+
+
+def fleet() -> List[ReplicaSpec]:
+    """Three heterogeneous tiers, two replicas each.  Token rates are
+    equalised across tiers (the large tier is provisioned with more
+    accelerators to hold the same speed — which is exactly why its
+    $/token is higher); capability and cost scale with size."""
+    def mk(name: str, cap: float, cost: float) -> ReplicaSpec:
+        return ReplicaSpec(name, capability=cap, cost_per_1k_tokens=cost,
+                           prefill_tokens_per_s=6000.0,
+                           decode_tokens_per_s=60.0, slots=4)
+    return [mk("small-0", 0.40, 0.5), mk("small-1", 0.40, 0.5),
+            mk("medium-0", 0.60, 2.0), mk("medium-1", 0.60, 2.0),
+            mk("large-0", 0.85, 8.0), mk("large-1", 0.85, 8.0)]
+
+
+def make_trace(seed: int, n_requests: int):
+    return request_trace(n_requests, seed=seed, period_s=PERIOD_S,
+                         base_rps=1.0, peak_rps=5.0,
+                         burst_rate_per_hour=4.0, burst_duration_s=90.0,
+                         burst_multiplier=4.0)
+
+
+# ----------------------------------------------------------------------
+# 1. Routing: capability/cost beats round-robin AND least-loaded
+# ----------------------------------------------------------------------
+def routing_gate(seed: int, smoke: bool) -> Dict:
+    n_requests = 1500 if smoke else 3000
+    seeds = [seed] if smoke else [seed, seed + 1, seed + 2]
+    policies = {"round_robin": RoundRobinRouter,
+                "least_loaded": LeastLoadedRouter,
+                "capability_cost": CapabilityCostRouter}
+    per_seed: Dict[int, Dict[str, Dict[str, float]]] = {}
+    for s in seeds:
+        trace = make_trace(s, n_requests)
+        rows: Dict[str, Dict[str, float]] = {}
+        for name, cls in policies.items():
+            pool = ReplicaPool(fleet(), cls())
+            rows[name] = pool.route_trace(trace).report()
+        per_seed[s] = rows
+        cc, rr, ll = (rows["capability_cost"], rows["round_robin"],
+                      rows["least_loaded"])
+        print(f"--- routing seed {s}: cost "
+              f"capcost {cc['total_cost']:.0f} vs "
+              f"rr {rr['total_cost']:.0f} / ll {ll['total_cost']:.0f}; "
+              f"SLO attainment {cc['slo_attainment']:.3f} vs "
+              f"{rr['slo_attainment']:.3f} / {ll['slo_attainment']:.3f} "
+              f"({cc['rejected']:.0f} rejected)")
+        assert cc["total_cost"] < rr["total_cost"], \
+            f"seed {s}: capcost not cheaper than round-robin"
+        assert cc["total_cost"] < ll["total_cost"], \
+            f"seed {s}: capcost not cheaper than least-loaded"
+        assert cc["slo_attainment"] >= rr["slo_attainment"], \
+            f"seed {s}: capcost SLO attainment below round-robin"
+        assert cc["slo_attainment"] >= ll["slo_attainment"], \
+            f"seed {s}: capcost SLO attainment below least-loaded"
+    return {str(s): per_seed[s] for s in seeds}
+
+
+# ----------------------------------------------------------------------
+# 2. Per-slot prefill: no resident re-prefill, outputs request-independent
+# ----------------------------------------------------------------------
+def prefill_gate(seed: int, smoke: bool) -> Dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.models import Model
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_arch("glm4-9b", smoke=True)
+    params = Model(cfg).init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    lens = [6, 9, 4, 7, 5, 8]
+    budgets = [3, 6, 4, 8, 5, 4]    # staggered finishes: slots turn over
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in lens]
+
+    def requests():
+        return [Request(uid=i, prompt=p, max_new_tokens=budgets[i])
+                for i, p in enumerate(prompts)]
+
+    # Solo references: each request alone in a B=1 engine.
+    solo: Dict[int, List[int]] = {}
+    for req in requests():
+        eng = ServeEngine(cfg, params, batch_size=1, max_seq=64)
+        eng.submit(req)
+        [r] = eng.run_until_drained()
+        solo[r.uid] = list(r.generated)
+
+    per_slot = ServeEngine(cfg, params, batch_size=2, max_seq=64)
+    for req in requests():
+        per_slot.submit(req)
+    fin = per_slot.run_until_drained()
+    assert len(fin) == len(prompts)
+    assert per_slot.prefill_calls == len(prompts), \
+        "per-slot admit must prefill each request exactly once"
+    assert per_slot.prefill_tokens == sum(lens), \
+        "per-slot admit must never re-prefill resident tokens"
+    mismatched = [r.uid for r in fin if list(r.generated) != solo[r.uid]]
+    assert not mismatched, \
+        f"per-slot outputs depend on batch co-residents: {mismatched}"
+
+    legacy = ServeEngine(cfg, params, batch_size=2, max_seq=64,
+                         per_slot_prefill=False)
+    for req in requests():
+        legacy.submit(req)
+    legacy.run_until_drained()
+    assert legacy.prefill_tokens > per_slot.prefill_tokens, \
+        "legacy shim should re-prefill residents (more prefill tokens)"
+
+    print(f"--- per-slot prefill: {per_slot.prefill_calls} prefills / "
+          f"{per_slot.prefill_tokens} tokens for {len(prompts)} requests "
+          f"(legacy shim: {legacy.prefill_calls} prefills / "
+          f"{legacy.prefill_tokens} tokens); outputs == solo references")
+    return {"requests": len(prompts),
+            "per_slot": {"prefill_calls": per_slot.prefill_calls,
+                         "prefill_tokens": per_slot.prefill_tokens},
+            "legacy": {"prefill_calls": legacy.prefill_calls,
+                       "prefill_tokens": legacy.prefill_tokens}}
+
+
+# ----------------------------------------------------------------------
+# 3. Demand export: observed load -> TidalService replica targets
+# ----------------------------------------------------------------------
+def demand_gate(seed: int, smoke: bool) -> Dict:
+    trace = make_trace(seed, 1500 if smoke else 3000)
+    pool = ReplicaPool(fleet(), CapabilityCostRouter(),
+                       demand_bucket_s=60.0)
+    pool.route_trace(trace)
+    svc = demand_service(pool, min_replicas=1, max_replicas=16)
+
+    span = trace[-1].arrival_s
+    ts = np.arange(0.0, span, 60.0)
+    rates = [pool.observed_rps(float(t)) for t in ts]
+    t_peak = float(ts[int(np.argmax(rates))])
+    t_trough = float(ts[int(np.argmin(rates))])
+    peak = svc.target_replicas(t_peak)
+    trough = svc.target_replicas(t_trough)
+    print(f"--- demand export: observed {min(rates):.2f}..{max(rates):.2f}"
+          f" rps -> replica target {trough} (trough) .. {peak} (peak)")
+    assert peak > trough, \
+        "replica target must track the observed demand swing"
+    assert 1 <= trough and peak <= 16, "targets must respect min/max"
+    return {"target_peak": peak, "target_trough": trough,
+            "rps_max": max(rates), "mean_service_s": pool.mean_service_s()}
+
+
+# ----------------------------------------------------------------------
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller configs for CI")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the run-wide benchmark seed")
+    args = ap.parse_args(argv)
+    seed = args.seed if args.seed is not None else bench_seed()
+    summary = {
+        "seed": seed,
+        "routing": routing_gate(seed, args.smoke),
+        "per_slot_prefill": prefill_gate(seed, args.smoke),
+        "demand_export": demand_gate(seed, args.smoke),
+    }
+    write_bench_json("serving", summary)
+    print("serving bench: all gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,15 @@ runs continuous batching (prefill + decode with a KV cache) over a
 reduced glm4-9b, the same decode_step the dry-run lowers at
 decode_32k/long_500k scale.
 
+Part 2 deliberately stays on the *legacy whole-batch shim*
+(``per_slot=False``): every request shares one token budget, so slots
+turn over in lock-step waves and the legacy re-prefill only ever covers
+freshly admitted prompts — here the shim is as cheap as per-slot admit
+and pins the original engine semantics as an executable regression
+reference.  The per-slot path, and the workloads where it actually wins
+(staggered budgets, requests finishing mid-flight), are exercised by
+``benchmarks/serving_bench.py`` and documented in docs/serving.md.
+
 Usage::
 
     PYTHONPATH=src python examples/inference_cluster.py
@@ -95,7 +104,9 @@ def main():
 
     print("\n== Part 2: serve a placed model (continuous batching) ==")
     from repro.launch.serve import serve_demo
-    finished = serve_demo("glm4-9b", requests=10, batch_size=4, max_new=6)
+    # Legacy shim on purpose — see the module docstring for why.
+    finished = serve_demo("glm4-9b", requests=10, batch_size=4, max_new=6,
+                          per_slot=False)
     assert len(finished) == 10
     print("inference_cluster complete")
 

@@ -25,8 +25,10 @@ from .snapshot import (FullSnapshotter, IncrementalSnapshotter, Snapshot,
                        snapshots_equal)
 from .topology import ClusterTopology, small_topology, \
     training_cluster_topology
-from .workload import (backfill_training_trace, diurnal_demand,
-                       inference_trace, trace_stats, training_trace)
+from .workload import (DEFAULT_QUERY_CLASSES, QueryClass, ServeRequest,
+                       backfill_training_trace, diurnal_demand,
+                       inference_trace, request_trace, trace_stats,
+                       training_trace)
 
 __all__ = [
     "ClusterState", "Job", "JobKind", "JobState", "Placement",
@@ -39,7 +41,8 @@ __all__ = [
     "IncrementalSnapshotter", "Snapshot", "snapshots_equal",
     "ClusterTopology", "small_topology", "training_cluster_topology",
     "backfill_training_trace", "diurnal_demand", "inference_trace",
-    "trace_stats", "training_trace",
+    "trace_stats", "training_trace", "QueryClass", "ServeRequest",
+    "DEFAULT_QUERY_CLASSES", "request_trace",
     # events + dynamics (full surface in repro.core.dynamics)
     "Event", "EventBus", "EventKind", "ClusterDynamics", "DynamicsConfig",
     "DynamicsSummary", "NodeFailureInjector", "GpuFailureInjector",

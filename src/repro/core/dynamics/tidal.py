@@ -21,7 +21,7 @@ job, so quota and feasibility checks apply unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..events import EventKind
 from ..framework.api import DynamicsPlugin
@@ -42,9 +42,19 @@ class TidalService:
     max_replicas: int = 8
     peak_hour: float = 14.0
     priority: int = PRIO_HIGH
+    #: Measured demand hook: replicas wanted at time ``t`` (fractional
+    #: ok; clipped to [min, max]).  When set it replaces the analytic
+    #: diurnal curve — this is how the serving fabric's ReplicaPool
+    #: exports its observed request load to the autoscaler
+    #: (see :func:`repro.serve.replica.demand_service`).
+    demand: Optional[Callable[[float], float]] = None
 
     def target_replicas(self, t: float) -> int:
         """Demanded replica count at time ``t`` (rounded to a pod)."""
+        if self.demand is not None:
+            raw = float(self.demand(t))
+            return int(round(min(float(self.max_replicas),
+                                 max(float(self.min_replicas), raw))))
         return int(round(diurnal_demand(t, self.min_replicas,
                                         self.max_replicas,
                                         peak_hour=self.peak_hour)))

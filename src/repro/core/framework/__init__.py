@@ -22,8 +22,8 @@ from .api import (AdmitPlugin, ClusterSelectPlugin, CycleContext,
                   CycleResult, DynamicsPlugin, FilterPlugin, PermitPlugin,
                   PlacementPass, Plugin, PostBindPlugin, PreemptPlugin,
                   ProfileSet, QueuePolicyPlugin, QueueSortPlugin,
-                  ReservePlugin, SchedulingContext, SchedulingProfile,
-                  ScorePlugin, single_pass_plan)
+                  ReservePlugin, RouterPolicyPlugin, SchedulingContext,
+                  SchedulingProfile, ScorePlugin, single_pass_plan)
 from .builtin import (BackfillHeadTimeout, BackfillPolicy,
                       BestEffortFIFOPolicy, BinpackScore, ColocateBonus,
                       DefaultQueueSort, DynamicFeasibility, GpuTypeFilter,
@@ -41,7 +41,7 @@ __all__ = [
     "Plugin", "QueueSortPlugin", "AdmitPlugin", "FilterPlugin",
     "ScorePlugin", "ReservePlugin", "PermitPlugin", "PostBindPlugin",
     "PreemptPlugin", "QueuePolicyPlugin", "DynamicsPlugin",
-    "ClusterSelectPlugin", "PlacementPass",
+    "ClusterSelectPlugin", "RouterPolicyPlugin", "PlacementPass",
     "SchedulingProfile", "ProfileSet", "SchedulingContext", "CycleContext",
     "CycleResult", "single_pass_plan",
     # registry

@@ -26,6 +26,9 @@ Dynamics        cluster dynamics (failure injection, drain windows,
 ClusterSelect   federation-level routing (repro.core.federation): which
                 member cluster a job lands in, vectorized over the
                 per-cluster summary matrix
+RouterPolicy    query-level routing (repro.serve): which model replica
+                serves an individual request, one level below
+                ClusterSelect
 ==============  ======================================================
 
 **Score plugin contract** — every Score plugin declares whether its term
@@ -320,6 +323,32 @@ class ClusterSelectPlugin(Plugin):
 
     def score(self, job: Job, summary) -> Optional[np.ndarray]:
         return None
+
+
+class RouterPolicyPlugin(Plugin):
+    """Query-routing extension point (:mod:`repro.serve`): decides which
+    model *replica* serves an individual request — the request-level
+    sibling of :class:`ClusterSelectPlugin` (jobs → clusters there,
+    queries → replicas here, per ECCOS-style constrained routing).
+
+    * :meth:`select` — pick a replica index from ``replicas`` (a
+      sequence of :class:`repro.serve.replica.Replica`, each exposing
+      its :class:`~repro.serve.replica.ReplicaSpec` and live load) for
+      ``request`` (a :class:`repro.core.workload.ServeRequest`) at
+      simulated time ``now``.  Return ``None`` to REJECT the request
+      (no replica can meet its constraints); the pool records the
+      rejection as an SLO miss rather than queueing it forever.
+    * :meth:`observe` — optional feedback hook called with each
+      completed :class:`repro.serve.metrics.RequestOutcome`, so
+      learning policies can update capability estimates online.
+    """
+
+    def select(self, request, replicas: Sequence, now: float
+               ) -> Optional[int]:
+        raise NotImplementedError
+
+    def observe(self, outcome) -> None:  # pragma: no cover - hook
+        pass
 
 
 # ----------------------------------------------------------------------

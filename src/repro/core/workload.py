@@ -213,6 +213,111 @@ def backfill_training_trace(n_jobs: int, *, seed: int = 0,
     return jobs
 
 
+# ---------------------------------------------------------------------------
+# Request-level serving workload (the serving fabric's input)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QueryClass:
+    """One class of queries in the serving mix.
+
+    ``quality_floor`` is the minimum model capability (0..1, same scale
+    as ``ReplicaSpec.capability``) that produces an acceptable answer;
+    ``latency_slo_s`` bounds end-to-end latency (queue wait + prefill +
+    decode).  ``weight`` is the class's share of the arrival mix."""
+    name: str
+    prompt_mean: int = 128          # mean prompt tokens (geometric-ish)
+    output_mean: int = 64           # mean output tokens
+    quality_floor: float = 0.0
+    latency_slo_s: float = 30.0
+    weight: float = 1.0
+
+
+#: A mixed production-style query population: short chat turns dominate,
+#: long-document summarisation is rare but heavy, code queries demand a
+#: capable model, background embedding-style traffic tolerates anything.
+DEFAULT_QUERY_CLASSES: Tuple[QueryClass, ...] = (
+    QueryClass("chat", prompt_mean=96, output_mean=48,
+               quality_floor=0.35, latency_slo_s=15.0, weight=0.55),
+    QueryClass("code", prompt_mean=256, output_mean=128,
+               quality_floor=0.70, latency_slo_s=45.0, weight=0.20),
+    QueryClass("summarize", prompt_mean=1024, output_mean=96,
+               quality_floor=0.50, latency_slo_s=90.0, weight=0.10),
+    QueryClass("batch", prompt_mean=192, output_mean=32,
+               quality_floor=0.0, latency_slo_s=300.0, weight=0.15),
+)
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One query arriving at the serving fabric router."""
+    uid: int
+    qclass: QueryClass
+    arrival_s: float
+    prompt_tokens: int
+    output_tokens: int
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prompt_tokens + self.output_tokens
+
+    @property
+    def deadline_s(self) -> float:
+        return self.arrival_s + self.qclass.latency_slo_s
+
+
+def request_trace(n_requests: int, *, seed: int = 0,
+                  classes: Sequence[QueryClass] = DEFAULT_QUERY_CLASSES,
+                  base_rps: float = 2.0, peak_rps: float = 10.0,
+                  period_s: float = DAY_S, peak_hour: float = 14.0,
+                  burst_rate_per_hour: float = 2.0,
+                  burst_duration_s: float = 120.0,
+                  burst_multiplier: float = 4.0) -> List[ServeRequest]:
+    """Diurnal + bursty request arrivals over a mixed query-class population.
+
+    A nonhomogeneous Poisson process sampled by thinning: the base rate
+    rides :func:`diurnal_demand` between ``base_rps`` and ``peak_rps``
+    (``period_s`` compresses a whole diurnal cycle for fast benches),
+    with Poisson-arriving burst windows that multiply the instantaneous
+    rate by ``burst_multiplier`` for ``burst_duration_s`` — the "sudden
+    hot query" spikes that separate load-aware from load-blind routing.
+    Per-request prompt/output lengths are geometric around the class
+    means (min 4 / min 1 tokens)."""
+    rng = np.random.default_rng(seed)
+    cls = list(classes)
+    weights = np.asarray([c.weight for c in cls], float)
+    weights = weights / weights.sum()
+    # Burst window starts: Poisson over a generous horizon.
+    horizon = period_s * max(4.0, 8.0 * n_requests / (base_rps * period_s))
+    n_bursts = rng.poisson(burst_rate_per_hour * horizon / 3600.0)
+    burst_starts = np.sort(rng.uniform(0.0, horizon, size=n_bursts))
+
+    def rate(t: float) -> float:
+        r = diurnal_demand(t, base_rps, peak_rps, period=period_s,
+                           peak_hour=peak_hour)
+        j = np.searchsorted(burst_starts, t, side="right") - 1
+        if j >= 0 and t - burst_starts[j] < burst_duration_s:
+            r *= burst_multiplier
+        return r
+
+    rate_max = peak_rps * burst_multiplier
+    out: List[ServeRequest] = []
+    t = 0.0
+    while len(out) < n_requests:
+        t += float(rng.exponential(1.0 / rate_max))
+        if rng.uniform() > rate(t) / rate_max:
+            continue                      # thinned away
+        ci = int(rng.choice(len(cls), p=weights))
+        c = cls[ci]
+        out.append(ServeRequest(
+            uid=len(out),
+            qclass=c,
+            arrival_s=t,
+            prompt_tokens=max(4, int(rng.geometric(1.0 / c.prompt_mean))),
+            output_tokens=max(1, int(rng.geometric(1.0 / c.output_mean))),
+        ))
+    return out
+
+
 def trace_stats(jobs: Sequence[Job]) -> TraceStats:
     by_size: Dict[int, int] = {}
     gpu_time: Dict[int, float] = {}

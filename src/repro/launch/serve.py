@@ -19,11 +19,12 @@ from ..serve import Request, ServeEngine
 
 
 def serve_demo(arch: str, *, requests: int = 12, batch_size: int = 4,
-               max_new: int = 8, seed: int = 0):
+               max_new: int = 8, seed: int = 0, per_slot: bool = True):
     cfg = get_arch(arch, smoke=True)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
-    engine = ServeEngine(cfg, params, batch_size=batch_size, max_seq=128)
+    engine = ServeEngine(cfg, params, batch_size=batch_size, max_seq=128,
+                         per_slot_prefill=per_slot)
     rng = np.random.default_rng(seed)
     for i in range(requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 17)
@@ -45,9 +46,13 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--legacy", action="store_true",
+                    help="use the legacy whole-batch re-prefill shim "
+                         "instead of per-slot continuous batching")
     args = ap.parse_args()
     serve_demo(args.arch, requests=args.requests,
-               batch_size=args.batch_size, max_new=args.max_new)
+               batch_size=args.batch_size, max_new=args.max_new,
+               per_slot=not args.legacy)
 
 
 if __name__ == "__main__":

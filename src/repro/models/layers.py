@@ -317,30 +317,56 @@ def decode_attention(p: Params, x: jnp.ndarray, k_cache: jnp.ndarray,
     x: (B, 1, d).  k_cache/v_cache: (B, W, Kh, hd).  ``cache_len`` is the
     number of tokens already in history (= absolute position of x).
     Slot i holds absolute position p = cache_len - ((cache_len - i) mod W).
+
+    ``cache_len`` may be a scalar (every batch row shares one position
+    clock — training-style decode, the dry-run shapes) or a ``(B,)``
+    vector (per-row clocks — the serving engine's continuous batching,
+    where slots were prefilled at different times and hold sequences of
+    different lengths).  The scalar path is kept verbatim so existing
+    decode lowerings are untouched.
     """
     B = x.shape[0]
     W = k_cache.shape[1]
     hd = p["wq"].shape[-1]
-    pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
+    per_row = jnp.asarray(cache_len).ndim > 0
+    if per_row:
+        cl = jnp.asarray(cache_len, jnp.int32)           # (B,)
+        pos = cl[:, None]
+    else:
+        pos = jnp.full((B, 1), cache_len, dtype=jnp.int32)
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     q = apply_rope(q, pos, theta)
     k = apply_rope(k, pos, theta)
-    slot = jnp.mod(cache_len, W)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
     idx = jnp.arange(W)
-    abs_pos = cache_len - jnp.mod(cache_len - idx, W)
-    valid = abs_pos >= 0
-    if window > 0:
-        valid &= abs_pos > cache_len - window
+    if per_row:
+        slot = jnp.mod(cl, W)                            # (B,)
+        rows = jnp.arange(B)
+        k_cache = k_cache.at[rows, slot].set(k[:, 0])
+        v_cache = v_cache.at[rows, slot].set(v[:, 0])
+        abs_pos = cl[:, None] - jnp.mod(cl[:, None] - idx[None, :], W)
+        valid = abs_pos >= 0                             # (B, W)
+        if window > 0:
+            valid &= abs_pos > cl[:, None] - window
+        vmask = valid[:, None, None, None, :]
+    else:
+        slot = jnp.mod(cache_len, W)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot,
+                                                      axis=1)
+        abs_pos = cache_len - jnp.mod(cache_len - idx, W)
+        valid = abs_pos >= 0
+        if window > 0:
+            valid &= abs_pos > cache_len - window
+        vmask = valid[None, None, None, None, :]
     Kh = k_cache.shape[2]
     G = q.shape[2] // Kh
     qf = q.reshape(B, 1, Kh, G, hd).astype(jnp.float32)
     s = jnp.einsum("btkgh,bskh->btkgs", qf,
                    k_cache.astype(jnp.float32)) / math.sqrt(hd)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(vmask, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("btkgs,bskh->btkgh", w,
                    v_cache.astype(jnp.float32)).astype(x.dtype)

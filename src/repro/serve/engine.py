@@ -1,10 +1,24 @@
-"""Batched serving engine (continuous-batching flavoured, CPU-scale).
+"""Continuous-batching serving engine (per-slot prefill, CPU-scale).
 
-The engine keeps one fixed-size decode batch; requests occupy slots,
-finished slots are refilled from the queue.  This is the "inference
-service" workload kind Kant schedules with Spread/E-Spread — the
-``examples/inference_cluster.py`` demo runs several replica engines whose
-pods were placed by RSCH.
+The engine keeps one fixed-size decode batch of **slots**.  Admission is
+per-slot: a newly admitted request is prefilled *alone* (a ``B=1``
+prefill of just its own prompt) and its KV/SSM cache rows are spliced
+into the live batch cache at the slot index — resident requests keep
+decoding undisturbed and are **never re-prefilled**.  Each slot carries
+its own position clock (the ``(B,)`` cache-length vector understood by
+:func:`repro.models.layers.decode_attention`), so sequences of different
+lengths coexist in one batch without left-padding — request outputs are
+independent of what else happens to share the batch.
+
+Per-request accounting (TTFT / TPOT in engine steps, deadline eviction,
+prefill-call counting) makes the engine the measurement substrate for
+the serving fabric (:mod:`repro.serve.replica` scales the same slot
+semantics to replica pools in simulated time).
+
+The pre-fabric behaviour — re-prefill the *whole* batch on every admit,
+one shared position clock, left-padded to the batch max — is preserved
+as ``ServeEngine(..., per_slot_prefill=False)`` for A/B comparison and
+backward compatibility (``examples/inference_cluster.py`` pins it).
 """
 
 from __future__ import annotations
@@ -29,43 +43,181 @@ class Request:
     max_new_tokens: int = 16
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # -- serving-fabric accounting ------------------------------------
+    qclass: str = "default"       # query class (workload.QueryClass name)
+    #: evict the request this many engine steps after admission (None =
+    #: never); evicted requests come back ``done`` with ``evicted`` set.
+    deadline_steps: Optional[int] = None
+    evicted: bool = False
+    submitted_step: Optional[int] = None
+    admitted_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    finished_step: Optional[int] = None
+
+    @property
+    def ttft_steps(self) -> Optional[int]:
+        """Engine steps from submission to the first generated token."""
+        if self.first_token_step is None or self.submitted_step is None:
+            return None
+        return self.first_token_step - self.submitted_step
+
+    @property
+    def tpot_steps(self) -> Optional[float]:
+        """Mean engine steps per generated token after the first."""
+        if (self.finished_step is None or self.first_token_step is None
+                or len(self.generated) <= 1):
+            return None
+        return ((self.finished_step - self.first_token_step)
+                / (len(self.generated) - 1))
 
 
 class ServeEngine:
+    """Fixed-slot continuous-batching engine over one model replica.
+
+    ``per_slot_prefill=True`` (default): per-slot admission as described
+    in the module docstring.  ``False``: the legacy full-batch re-prefill
+    shim (every admit replays prompt+generated of *all* resident slots,
+    left-padded to one shared length).
+    """
+
     def __init__(self, cfg: ArchConfig, params: PyTree, *,
                  batch_size: int = 4, max_seq: int = 256,
-                 eos_id: Optional[int] = None) -> None:
+                 eos_id: Optional[int] = None,
+                 per_slot_prefill: bool = True) -> None:
         self.cfg = cfg
         self.model = Model(cfg)
         self.params = params
         self.B = batch_size
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.per_slot = per_slot_prefill
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, seq_len=max_seq))
         self._decode = jax.jit(self.model.decode_step)
+        self._splice = jax.jit(self._splice_impl)
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * batch_size
         self.cache: Optional[PyTree] = None
         self.last_token = np.zeros(batch_size, np.int32)
         self.steps = 0
+        # Prefill accounting: ``prefill_tokens`` counts every token that
+        # ran through a prefill pass.  Per-slot admission keeps this at
+        # exactly sum(len(prompt)) over admitted requests; the legacy
+        # shim re-runs resident sequences so it grows superlinearly
+        # (asserted by benchmarks/serving_bench.py).
+        self.prefill_calls = 0
+        self.prefill_tokens = 0
+        self.evictions = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if req.submitted_step is None:
+            req.submitted_step = self.steps
         self.queue.append(req)
 
-    def _admit(self) -> None:
+    def evict(self, uid: int) -> bool:
+        """Evict a resident request by uid (frees its slot next admit)."""
+        for s in self.slots:
+            if s is not None and s.uid == uid and not s.done:
+                self._mark_evicted(s)
+                return True
+        return False
+
+    def _mark_evicted(self, req: Request) -> None:
+        req.evicted = True
+        req.done = True
+        req.finished_step = self.steps
+        self.evictions += 1
+
+    def _evict_expired(self) -> None:
+        for s in self.slots:
+            if (s is not None and not s.done
+                    and s.deadline_steps is not None
+                    and s.admitted_step is not None
+                    and self.steps - s.admitted_step >= s.deadline_steps):
+                self._mark_evicted(s)
+
+    # ------------------------------------------------------------------
+    # Per-slot admission (continuous batching)
+    # ------------------------------------------------------------------
+    def _solo_batch(self, seq: np.ndarray) -> Dict[str, jnp.ndarray]:
+        batch = {"tokens": jnp.asarray(seq[None, :])}
+        if self.cfg.family == "vlm":
+            from ..models.frontend import patch_embeds
+            batch["patch_embeds"] = patch_embeds(self.cfg, 1)
+        if self.cfg.family == "encdec":
+            from ..models.frontend import frame_embeds
+            # Fixed encoder length: the spliced memory rows must share
+            # one shape across slots regardless of prompt length.
+            batch["enc_embeds"] = frame_embeds(self.cfg, 1,
+                                               self.max_seq * 4)
+        return batch
+
+    def _batch_template(self, solo: PyTree) -> PyTree:
+        """Empty B-slot cache shaped like a solo (B=1) prefill cache."""
+        def z(x):
+            return jnp.zeros((x.shape[0], self.B) + x.shape[2:], x.dtype)
+        tpl: PyTree = {"layers": jax.tree.map(z, solo["layers"]),
+                       "t": jnp.zeros((self.B,), jnp.int32)}
+        if "memory" in solo:
+            tpl["memory"] = jax.tree.map(z, solo["memory"])
+        return tpl
+
+    def _splice_impl(self, cache: PyTree, solo: PyTree, i) -> PyTree:
+        """Copy the solo cache's single batch row into slot ``i``."""
+        def put(c, s):
+            return c.at[:, i].set(s[:, 0])
+        out: PyTree = {"layers": jax.tree.map(put, cache["layers"],
+                                              solo["layers"]),
+                       "t": cache["t"].at[i].set(
+                           solo["t"].astype(cache["t"].dtype))}
+        if "memory" in cache:
+            out["memory"] = jax.tree.map(put, cache["memory"],
+                                         solo["memory"])
+        return out
+
+    def _admit_per_slot(self) -> None:
+        """Fill empty slots one request at a time: prefill the incoming
+        request ALONE and splice its cache rows into the live batch —
+        resident slots keep their cache and their position clocks."""
+        for i in range(self.B):
+            s = self.slots[i]
+            if not ((s is None or s.done) and self.queue):
+                continue
+            req = self.queue.pop(0)
+            seq = np.concatenate([req.prompt,
+                                  np.asarray(req.generated, np.int32)])
+            logits, solo = self._prefill(self.params,
+                                         self._solo_batch(seq))
+            self.prefill_calls += 1
+            self.prefill_tokens += len(seq)
+            if self.cache is None:
+                self.cache = self._batch_template(solo)
+            self.cache = self._splice(self.cache, solo,
+                                      jnp.asarray(i, jnp.int32))
+            if not self.last_token.flags.writeable:
+                self.last_token = self.last_token.copy()
+            self.last_token[i] = int(jnp.argmax(logits[0]))
+            req.admitted_step = self.steps
+            self.slots[i] = req
+
+    # ------------------------------------------------------------------
+    # Legacy full-batch re-prefill (the pre-fabric shim)
+    # ------------------------------------------------------------------
+    def _admit_rebatch(self) -> None:
         """Fill empty slots; (re)prefill the whole batch when admitting.
 
-        CPU-scale simplification: admission re-prefills every active
-        prompt + its generated tokens so all slots share one cache.  A
-        production engine would insert per-slot; the Kant integration
-        only needs request-level throughput semantics.
-        """
+        Legacy shim: admission re-prefills every active prompt + its
+        generated tokens so all slots share one cache and one position
+        clock (left-padded to the batch max).  Kept for A/B comparison;
+        resident outputs depend on co-resident lengths through the
+        left-pad, which is why the per-slot path replaced it."""
         changed = False
         for i in range(self.B):
             if (self.slots[i] is None or self.slots[i].done) and self.queue:
-                self.slots[i] = self.queue.pop(0)
+                req = self.queue.pop(0)
+                req.admitted_step = self.steps
+                self.slots[i] = req
                 changed = True
         if not changed or all(s is None for s in self.slots):
             return
@@ -78,6 +230,8 @@ class ServeEngine:
             seq = np.concatenate([s.prompt, np.asarray(s.generated,
                                                        np.int32)])
             toks[i, -len(seq):] = seq          # left-pad
+            self.prefill_tokens += len(seq)
+        self.prefill_calls += 1
         batch = {"tokens": jnp.asarray(toks)}
         if self.cfg.family == "vlm":
             from ..models.frontend import patch_embeds
@@ -87,6 +241,13 @@ class ServeEngine:
             batch["enc_embeds"] = frame_embeds(self.cfg, self.B, S * 4)
         logits, self.cache = self._prefill(self.params, batch)
         self.last_token = np.asarray(jnp.argmax(logits, -1), np.int32)
+
+    def _admit(self) -> None:
+        self._evict_expired()
+        if self.per_slot:
+            self._admit_per_slot()
+        else:
+            self._admit_rebatch()
 
     # ------------------------------------------------------------------
     def step(self) -> int:
@@ -98,17 +259,21 @@ class ServeEngine:
         if not active or self.cache is None:
             return 0
         for i in active:
-            self.slots[i].generated.append(int(self.last_token[i]))
+            s = self.slots[i]
+            if not s.generated:
+                s.first_token_step = self.steps
+            s.generated.append(int(self.last_token[i]))
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.last_token))
         self.last_token = np.asarray(jnp.argmax(logits, -1), np.int32)
-        self.steps += 1
         for i in active:
             s = self.slots[i]
             if len(s.generated) >= s.max_new_tokens or \
                     (self.eos_id is not None
                      and s.generated[-1] == self.eos_id):
                 s.done = True
+                s.finished_step = self.steps
+        self.steps += 1
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
@@ -122,4 +287,9 @@ class ServeEngine:
                 if s is not None and s.done:
                     finished.append(s)
                     self.slots[i] = None
+        # Collect anything already done before the loop broke out.
+        for i, s in enumerate(self.slots):
+            if s is not None and s.done:
+                finished.append(s)
+                self.slots[i] = None
         return finished

@@ -1,0 +1,303 @@
+"""Serving fabric: per-slot continuous batching, router policies,
+replica pool, demand export to the tidal autoscaler."""
+
+import numpy as np
+import pytest
+
+from repro.core import (DynamicsConfig, Simulator, SimConfig,
+                        request_trace)
+from repro.core.dynamics import TidalAutoscaler
+from repro.core.framework import (RouterPolicyPlugin, available_plugins,
+                                  create_plugin, register)
+from repro.core.workload import DEFAULT_QUERY_CLASSES, QueryClass, \
+    ServeRequest
+from repro.serve import (CapabilityCostRouter, LeastLoadedRouter,
+                         Replica, ReplicaPool, ReplicaSpec,
+                         RoundRobinRouter, demand_service,
+                         to_engine_request)
+
+from conftest import make_qsch
+
+
+# ----------------------------------------------------------------------
+# Engine: per-slot prefill (jax-backed, smoke arch)
+# ----------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine_setup():
+    import jax
+    from repro.configs import get_arch
+    from repro.models import Model
+    cfg = get_arch("glm4-9b", smoke=True)
+    params = Model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk_engine(cfg, params, **kw):
+    from repro.serve import ServeEngine
+    return ServeEngine(cfg, params, batch_size=2, max_seq=64, **kw)
+
+
+def test_per_slot_token_identical_to_legacy_on_waves(engine_setup):
+    """Equal-length prompts admitted in full waves: neither path pads,
+    so per-slot prefill must reproduce the legacy whole-batch re-prefill
+    token for token on a fixed seed."""
+    from repro.serve import Request
+    cfg, params = engine_setup
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab, size=6).astype(np.int32)
+               for _ in range(4)]
+
+    def run(per_slot):
+        eng = _mk_engine(cfg, params, per_slot_prefill=per_slot)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+        return {r.uid: list(r.generated)
+                for r in eng.run_until_drained()}
+
+    assert run(True) == run(False)
+
+
+def test_per_slot_outputs_independent_and_never_reprefilled(engine_setup):
+    """Mixed-length prompts with staggered finishes: every request's
+    output must equal its solo B=1 reference (admission splices into a
+    live batch without disturbing residents), and prefill accounting
+    must show exactly one prefill per request — while the legacy shim
+    re-runs resident tokens."""
+    from repro.serve import Request
+    cfg, params = engine_setup
+    rng = np.random.default_rng(2)
+    lens = [6, 9, 4, 7]
+    budgets = [3, 6, 4, 5]
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in lens]
+
+    solo = {}
+    for i, p in enumerate(prompts):
+        from repro.serve import ServeEngine
+        eng = ServeEngine(cfg, params, batch_size=1, max_seq=64)
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=budgets[i]))
+        [r] = eng.run_until_drained()
+        solo[i] = list(r.generated)
+
+    eng = _mk_engine(cfg, params)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=p, max_new_tokens=budgets[i]))
+    fin = eng.run_until_drained()
+    assert len(fin) == 4
+    assert {r.uid: list(r.generated) for r in fin} == solo
+    assert eng.prefill_calls == 4
+    assert eng.prefill_tokens == sum(lens)
+
+    legacy = _mk_engine(cfg, params, per_slot_prefill=False)
+    for i, p in enumerate(prompts):
+        legacy.submit(Request(uid=i, prompt=p, max_new_tokens=budgets[i]))
+    legacy.run_until_drained()
+    assert legacy.prefill_tokens > sum(lens)
+
+
+def test_deadline_eviction_frees_slot(engine_setup):
+    from repro.serve import Request
+    cfg, params = engine_setup
+    rng = np.random.default_rng(3)
+    eng = _mk_engine(cfg, params)
+    hog = Request(uid=0, prompt=rng.integers(0, cfg.vocab, size=5)
+                  .astype(np.int32), max_new_tokens=50, deadline_steps=3)
+    ok = Request(uid=1, prompt=rng.integers(0, cfg.vocab, size=5)
+                 .astype(np.int32), max_new_tokens=4)
+    eng.submit(hog)
+    eng.submit(ok)
+    fin = eng.run_until_drained(max_steps=100)
+    by_uid = {r.uid: r for r in fin}
+    assert by_uid[0].evicted and by_uid[0].done
+    assert len(by_uid[0].generated) < 50
+    assert not by_uid[1].evicted and len(by_uid[1].generated) == 4
+    assert eng.evictions == 1
+    # TTFT/TPOT accounting on the survivor.
+    assert by_uid[1].ttft_steps is not None and by_uid[1].ttft_steps >= 0
+    assert by_uid[1].tpot_steps == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------------------
+# Router policies (pure python, sim-time replicas)
+# ----------------------------------------------------------------------
+def _req(qclass: QueryClass, uid=0, t=0.0, prompt=100, out=50):
+    return ServeRequest(uid=uid, qclass=qclass, arrival_s=t,
+                        prompt_tokens=prompt, output_tokens=out)
+
+
+def _replica(cap=0.5, cost=1.0, prefill=5000.0, decode=50.0, slots=2,
+             name="r"):
+    return Replica(ReplicaSpec(name, capability=cap,
+                               cost_per_1k_tokens=cost,
+                               prefill_tokens_per_s=prefill,
+                               decode_tokens_per_s=decode, slots=slots))
+
+
+def test_round_robin_cycles():
+    reps = [_replica(name=f"r{i}") for i in range(3)]
+    pol = RoundRobinRouter()
+    req = _req(DEFAULT_QUERY_CLASSES[0])
+    assert [pol.select(req, reps, 0.0) for _ in range(6)] == \
+        [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_prefers_empty_replica():
+    reps = [_replica(name="busy"), _replica(name="idle")]
+    reps[0].admit(_req(DEFAULT_QUERY_CLASSES[0], out=500), 0.0, 0)
+    pol = LeastLoadedRouter()
+    assert pol.select(_req(DEFAULT_QUERY_CLASSES[0], uid=1), reps, 0.0) == 1
+
+
+def test_capcost_rejects_slo_infeasible_request():
+    """No replica can decode fast enough for the SLO: reject (None)
+    rather than knowingly miss; with reject_infeasible=False the
+    request degrades to the fastest capable replica instead."""
+    tight = QueryClass("tight", quality_floor=0.0, latency_slo_s=1.0)
+    slow = _replica(decode=10.0, name="slow")        # 500 tok -> 50 s
+    slower = _replica(decode=5.0, name="slower")
+    req = _req(tight, out=500)
+    assert CapabilityCostRouter().select(req, [slow, slower], 0.0) is None
+    pol = CapabilityCostRouter(reject_infeasible=False)
+    assert pol.select(req, [slower, slow], 0.0) == 1   # fastest capable
+
+
+def test_capcost_rejects_when_no_replica_meets_quality_floor():
+    hard = QueryClass("hard", quality_floor=0.9, latency_slo_s=100.0)
+    reps = [_replica(cap=0.4), _replica(cap=0.6)]
+    assert CapabilityCostRouter().select(_req(hard), reps, 0.0) is None
+    # reject_infeasible only relaxes the SLO stage, never quality.
+    pol = CapabilityCostRouter(reject_infeasible=False)
+    assert pol.select(_req(hard), reps, 0.0) is None
+
+
+def test_capcost_picks_cheapest_feasible_and_breaks_ties_on_latency():
+    easy = QueryClass("easy", quality_floor=0.5, latency_slo_s=100.0)
+    reps = [_replica(cap=0.9, cost=8.0, name="pricey"),
+            _replica(cap=0.6, cost=1.0, decode=25.0, name="cheap-slow"),
+            _replica(cap=0.6, cost=1.0, decode=50.0, name="cheap-fast"),
+            _replica(cap=0.3, cost=0.1, name="too-weak")]
+    # cheapest feasible wins over capable-but-pricey; equal-cost tie
+    # breaks toward lower predicted latency (index 2 beats index 1).
+    assert CapabilityCostRouter().select(_req(easy), reps, 0.0) == 2
+
+
+def test_capcost_online_learning_routes_around_misdeclared_replica():
+    cls = QueryClass("c", quality_floor=0.5, latency_slo_s=100.0)
+    pol = CapabilityCostRouter(learn=True, learn_rate=1.0)
+    reps = [_replica(cap=0.9, cost=0.5, name="liar"),
+            _replica(cap=0.9, cost=2.0, name="honest")]
+    assert pol.select(_req(cls), reps, 0.0) == 0        # cheapest prior
+    from repro.serve import RequestOutcome
+    pol.observe(RequestOutcome(uid=0, qclass="c", replica=0,
+                               rejected=False, quality_ok=False))
+    assert pol.select(_req(cls, uid=1), reps, 0.0) == 1  # routed around
+
+
+def test_router_policies_in_plugin_registry():
+    names = available_plugins()
+    for n in ("RoundRobinRouter", "LeastLoadedRouter",
+              "CapabilityCostRouter"):
+        assert n in names
+    pol = create_plugin("CapabilityCostRouter", slo_margin=0.5)
+    assert isinstance(pol, CapabilityCostRouter)
+    assert pol.slo_margin == 0.5
+
+
+def test_custom_router_policy_registers_and_routes():
+    """The docs/serving.md worked example: an out-of-tree policy plugs
+    into the pool through the shared framework registry."""
+    @register
+    class CheapestRouter(RouterPolicyPlugin):
+        name = "CheapestRouterTestOnly"
+
+        def select(self, request, replicas, now):
+            return min(range(len(replicas)),
+                       key=lambda i: replicas[i].spec.cost_per_1k_tokens)
+
+    reps = [ReplicaSpec("a", capability=1.0, cost_per_1k_tokens=5.0),
+            ReplicaSpec("b", capability=1.0, cost_per_1k_tokens=1.0)]
+    pool = ReplicaPool(reps, create_plugin("CheapestRouterTestOnly"))
+    out = pool.route(_req(DEFAULT_QUERY_CLASSES[0]))
+    assert out.replica == 1
+
+
+# ----------------------------------------------------------------------
+# Request trace + pool metrics
+# ----------------------------------------------------------------------
+def test_request_trace_is_sorted_mixed_and_reproducible():
+    t1 = request_trace(300, seed=7, period_s=1800.0)
+    t2 = request_trace(300, seed=7, period_s=1800.0)
+    assert [r.arrival_s for r in t1] == [r.arrival_s for r in t2]
+    arr = [r.arrival_s for r in t1]
+    assert arr == sorted(arr) and arr[0] > 0.0
+    names = {r.qclass.name for r in t1}
+    assert {"chat", "code"} <= names
+    assert all(r.prompt_tokens >= 4 and r.output_tokens >= 1 for r in t1)
+
+
+def test_pool_books_rejection_as_slo_miss():
+    hard = QueryClass("hard", quality_floor=0.99, latency_slo_s=10.0)
+    pool = ReplicaPool([ReplicaSpec("weak", capability=0.2,
+                                    cost_per_1k_tokens=1.0)],
+                       CapabilityCostRouter())
+    out = pool.route(_req(hard))
+    assert out.rejected and not out.slo_ok and out.cost == 0.0
+    assert pool.metrics.slo_attainment() == 0.0
+    assert pool.metrics.rejected() == 1
+
+
+def test_to_engine_request_is_deterministic_and_clipped():
+    req = ServeRequest(uid=5, qclass=DEFAULT_QUERY_CLASSES[0],
+                       arrival_s=0.0, prompt_tokens=500,
+                       output_tokens=999)
+    a = to_engine_request(req, vocab=512, seed=3, max_prompt=32,
+                          max_new=8)
+    b = to_engine_request(req, vocab=512, seed=3, max_prompt=32,
+                          max_new=8)
+    assert np.array_equal(a.prompt, b.prompt)
+    assert len(a.prompt) == 32 and a.max_new_tokens == 8
+    assert a.qclass == "chat"
+
+
+# ----------------------------------------------------------------------
+# Demand export round-trip: pool -> TidalService -> autoscaler -> sim
+# ----------------------------------------------------------------------
+def test_demand_export_roundtrip_through_autoscaler(topo, state):
+    # Low rates so the trace spans most of the compressed diurnal cycle
+    # (the generator peaks at t=0), single-slot replicas so the demand
+    # signal swings across several integer replica counts.
+    trace = request_trace(3000, seed=0, period_s=1800.0, base_rps=0.3,
+                          peak_rps=5.0, burst_rate_per_hour=1.0,
+                          burst_multiplier=2.0)
+    pool = ReplicaPool([ReplicaSpec("m", capability=0.9,
+                                    cost_per_1k_tokens=1.0,
+                                    prefill_tokens_per_s=6000.0,
+                                    decode_tokens_per_s=60.0, slots=1)],
+                       LeastLoadedRouter(), demand_bucket_s=300.0)
+    pool.route_trace(trace)
+    svc = demand_service(pool, min_replicas=1, max_replicas=8,
+                         gpus_per_replica=4, tenant="svc")
+
+    # The analytic curve is replaced by observed load, clipped to range.
+    span = trace[-1].arrival_s
+    targets = [svc.target_replicas(t) for t in np.arange(0, span, 60.0)]
+    assert max(targets) > min(targets), "targets must track the load"
+    assert all(1 <= x <= 8 for x in targets)
+
+    # Round-trip: the autoscaler scales a real simulated fleet to the
+    # pool's observed demand.
+    scaler = TidalAutoscaler([svc], interval_s=60.0)
+    qsch = make_qsch(topo, state, quota={"svc": {0: 1024}})
+    sim = Simulator(state, qsch,
+                    SimConfig(tick_interval=30.0, sample_interval=300.0,
+                              horizon=span,
+                              dynamics=DynamicsConfig(plugins=[scaler])))
+    sim.run([])
+    assert scaler.replicas_started >= max(targets), \
+        "fleet must ramp to the observed peak"
+    logged = {s.target for s in scaler.demand_log}
+    assert logged == {svc.target_replicas(s.t)
+                      for s in scaler.demand_log}
+    # The observed signal is bursty; allow the fleet some ramp lag.
+    assert scaler.satisfaction() > 0.7
+    state.check_invariants()
