@@ -90,7 +90,8 @@ def clone_jobs(jobs: Sequence[Job]) -> List[Job]:
                 n_pods=j.n_pods, gpus_per_pod=j.gpus_per_pod, kind=j.kind,
                 gang=j.gang, priority=j.priority,
                 submit_time=j.submit_time, duration=j.duration,
-                preemptible=j.preemptible, region=j.region)
+                preemptible=j.preemptible, region=j.region,
+                elastic=j.elastic)
             for j in jobs]
 
 

@@ -1,0 +1,246 @@
+"""Elastic-training benchmark: rigid-path parity + shrink/grow payoff.
+
+Two gates, matching the subsystem's acceptance criteria:
+
+1. **Parity** — with an :class:`ElasticManager` attached but no job
+   carrying an ``ElasticSpec``, simulation results are byte-identical
+   to the plain scheduler across the policy x strategy matrix: same
+   placements, same metric report.
+2. **Elastic vs rigid** — on a contended trace (steady small rigid
+   jobs fragmenting a 512-GPU cluster + large elastic gangs) with
+   seeded node failures, elastic scheduling beats the rigid baseline
+   on goodput (useful GPU-seconds inside the horizon) AND P90 JWTD,
+   while the voluntary reshape cost stays <= 10 % of the useful
+   GPU-seconds delivered.
+
+Plan menus come from :func:`repro.core.elastic.spec_from_artifacts`
+over synthetic power-law scaling artifacts — the same memoized path a
+real dry-run sweep feeds — and the summary reports the plan-cache
+hit/miss counters.
+
+Writes ``BENCH_elastic.json`` (uploaded as a CI artifact).
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import os
+import sys
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+if __package__ in (None, ""):   # `python benchmarks/elastic_bench.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import (bench_seed, clone_jobs, scale_topology,
+                               write_bench_json)  # noqa: E402
+from repro.core import (CheckpointModel, ClusterState, DynamicsConfig,
+                        ElasticManager, ElasticSpec, Job,
+                        NodeFailureInjector, QSCH, QSCHConfig, QueuePolicy,
+                        QuotaManager, RSCH, RSCHConfig, SimConfig,
+                        Simulator, SimResult, Strategy, scaling_artifacts,
+                        spec_from_artifacts, training_trace,
+                        waiting_percentile)  # noqa: E402
+from repro.core.elastic import plan_cache_stats  # noqa: E402
+
+
+def run_sim(jobs: Sequence[Job], *, elastic: bool = False,
+            policy=QueuePolicy.BACKFILL, strategy=Strategy.E_BINPACK,
+            horizon: Optional[float] = None,
+            dynamics: Optional[DynamicsConfig] = None,
+            n_gpus: int = 512) -> SimResult:
+    topo = scale_topology(n_gpus=n_gpus)
+    state = ClusterState.create(topo)
+    qm = QuotaManager({"t0": {0: 10**6}})
+    rsch = RSCH(topo, RSCHConfig(train_strategy=strategy))
+    qsch = QSCH(qm, rsch, QSCHConfig(policy=policy),
+                elastic=ElasticManager() if elastic else None)
+    sim = Simulator(state, qsch,
+                    SimConfig(tick_interval=30.0, sample_interval=300.0,
+                              binding_latency=45.0, horizon=horizon,
+                              dynamics=dynamics))
+    return sim.run(clone_jobs(jobs))
+
+
+def strip_specs(jobs: Sequence[Job]) -> List[Job]:
+    """The rigid A/B arm: the same trace with every ElasticSpec
+    removed (ideal shapes and durations are already identical)."""
+    out = clone_jobs(jobs)
+    for j in out:
+        j.elastic = None
+    return out
+
+
+def placement_fingerprint(result: SimResult) -> List:
+    return [(j.uid, j.start_time, j.end_time,
+             tuple((p.node, p.gpu_indices)
+                   for p in (j.placement.pods if j.placement else ())))
+            for j in result.jobs]
+
+
+# ----------------------------------------------------------------------
+# 1. Parity: manager attached + no specs == plain scheduler
+# ----------------------------------------------------------------------
+def parity_gate(seed: int, smoke: bool) -> Dict:
+    jobs = training_trace(120 if smoke else 240, seed=seed,
+                          arrival_rate_per_hour=500,
+                          mean_duration_s=2400.0)
+    jobs = [j for j in jobs if j.n_gpus <= 128]
+    policies = [QueuePolicy.BACKFILL, QueuePolicy.STRICT_FIFO,
+                QueuePolicy.BEST_EFFORT_FIFO]
+    strategies = [Strategy.E_BINPACK, Strategy.BINPACK]
+    checked = 0
+    for policy in policies:
+        for strategy in strategies:
+            base = run_sim(jobs, policy=policy, strategy=strategy)
+            managed = run_sim(jobs, policy=policy, strategy=strategy,
+                              elastic=True)
+            assert placement_fingerprint(base) == placement_fingerprint(
+                managed), f"parity broken: {policy} x {strategy}"
+            assert base.metrics.report() == managed.metrics.report(), \
+                f"metric parity broken: {policy} x {strategy}"
+            checked += 1
+    print(f"--- parity: {checked} policy x strategy configs "
+          f"byte-identical with an idle ElasticManager")
+    return {"configs_checked": checked}
+
+
+# ----------------------------------------------------------------------
+# 2. Elastic vs rigid on a contended, failing cluster
+# ----------------------------------------------------------------------
+def _elastic_spec() -> ElasticSpec:
+    """One model family's plan menu (128 GPUs ideal, shrinkable to 64
+    and 32) derived from synthetic power-law scaling artifacts through
+    the memoized estimation path."""
+    return spec_from_artifacts(
+        scaling_artifacts("bench-train", "large", [32, 64, 128],
+                          alpha=0.85))
+
+
+def _contended_workload(seed: int, smoke: bool) -> List[Job]:
+    """Small rigid jobs keep the cluster fragmented (~50 % load) while
+    a burst of 128-GPU gangs — each wanting a quarter of the cluster —
+    arrives on top.  Rigid scheduling serializes the gangs; elastic
+    ones shrink into whatever is free and grow back as peers finish."""
+    rng = np.random.default_rng(seed)
+    jobs: List[Job] = []
+    n_small = 60 if smoke else 100
+    window = (5.0 if smoke else 10.0) * 3600.0
+    for i in range(n_small):
+        n_gpus = int(rng.choice([8, 16, 32], p=[.45, .35, .2]))
+        jobs.append(Job(
+            uid=i, tenant="t0", gpu_type=0, n_pods=n_gpus // 8,
+            gpus_per_pod=8,
+            submit_time=float(rng.uniform(0.0, window)),
+            duration=float(rng.uniform(1.0, 2.5)) * 3600.0))
+    spec = _elastic_spec()
+    ideal = spec.ideal()
+    n_big = 8 if smoke else 14
+    for k in range(n_big):
+        jobs.append(Job(
+            uid=10_000 + k, tenant="t0", gpu_type=0,
+            n_pods=ideal.n_pods, gpus_per_pod=ideal.gpus_per_pod,
+            submit_time=float(rng.uniform(0.0, 0.6 * window)),
+            duration=float(rng.uniform(2.0, 3.5)) * 3600.0,
+            elastic=spec))
+    return jobs
+
+
+def _censored_jobs(result: SimResult, horizon: float) -> List[Job]:
+    """Jobs that never started held the queue until the horizon — count
+    that wait instead of silently dropping them (``waiting_percentile``
+    only sees started jobs, which would bias P90 toward the arm that
+    starved more gangs)."""
+    out = []
+    for j in result.jobs:
+        if j.start_time is None:
+            j = copy.copy(j)
+            j.start_time = horizon
+        out.append(j)
+    return out
+
+
+def elastic_gate(seed: int, smoke: bool) -> Dict:
+    jobs = _contended_workload(seed, smoke)
+    horizon = (12 if smoke else 22) * 3600.0
+
+    def dynamics():
+        return DynamicsConfig(
+            plugins=[NodeFailureInjector(mtbf_s=6 * 3600.0,
+                                         repair_s=1200.0, shape=1.2)],
+            seed=seed,
+            recovery=CheckpointModel(interval_s=600.0,
+                                     restart_overhead_s=180.0))
+
+    rigid = run_sim(strip_specs(jobs), horizon=horizon,
+                    dynamics=dynamics())
+    elast = run_sim(jobs, elastic=True, horizon=horizon,
+                    dynamics=dynamics())
+
+    good = {"rigid": rigid.metrics.useful_gpu_seconds,
+            "elastic": elast.metrics.useful_gpu_seconds}
+    p90 = {"rigid": waiting_percentile(
+               _censored_jobs(rigid, horizon), 90.0),
+           "elastic": waiting_percentile(
+               _censored_jobs(elast, horizon), 90.0)}
+    overhead_frac = elast.metrics.reshape_overhead_fraction()
+    reshapes = elast.metrics.reshapes
+    shrunk_starts = sum(
+        1 for j in elast.jobs
+        if j.elastic is not None and j.active_plan is not None
+        and j.active_plan.shape != j.elastic.ideal().shape)
+
+    print(f"--- elastic vs rigid (seed {seed}, "
+          f"{elast.failures} failures, {reshapes} grow reshapes, "
+          f"{shrunk_starts} jobs finished shrunk)")
+    print(f"    goodput GPU-h : rigid {good['rigid']/3600:.0f}  "
+          f"elastic {good['elastic']/3600:.0f}  "
+          f"({good['elastic']/good['rigid']-1:+.1%})")
+    print(f"    P90 JWTD (s)  : rigid {p90['rigid']:.0f}  "
+          f"elastic {p90['elastic']:.0f}")
+    print(f"    reshape cost  : {overhead_frac:.2%} of useful "
+          f"GPU-seconds (budget 10%)")
+    assert good["elastic"] > good["rigid"], \
+        f"elastic goodput {good['elastic']:.0f} <= rigid {good['rigid']:.0f}"
+    assert p90["elastic"] < p90["rigid"], \
+        f"elastic P90 JWTD {p90['elastic']:.0f} >= rigid {p90['rigid']:.0f}"
+    assert overhead_frac <= 0.10, \
+        f"reshape overhead {overhead_frac:.2%} blew the 10% budget"
+    return {"goodput_gpu_s": good, "jwtd_p90_s": p90,
+            "goodput_gain": good["elastic"] / good["rigid"] - 1.0,
+            "reshape_overhead_fraction": overhead_frac,
+            "reshapes": reshapes, "shrunk_finishers": shrunk_starts,
+            "failures": {"rigid": rigid.failures,
+                         "elastic": elast.failures}}
+
+
+# ----------------------------------------------------------------------
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="smaller configs for CI (single seed)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the run-wide benchmark seed")
+    args = ap.parse_args(argv)
+    seed = args.seed if args.seed is not None else bench_seed()
+    seeds = [seed] if args.smoke else [seed, seed + 1, seed + 2]
+    summary: Dict = {
+        "seed": seed,
+        "parity": parity_gate(seed, args.smoke),
+        "elastic_vs_rigid": {
+            str(s): elastic_gate(s, args.smoke) for s in seeds},
+        # Satellite: plan-derivation memo counters — every workload
+        # build after the first hits the cache.
+        "plan_cache": plan_cache_stats(),
+    }
+    write_bench_json("elastic", summary)
+    print(f"elastic bench: all gates passed "
+          f"(plan cache {summary['plan_cache']['hits']} hits / "
+          f"{summary['plan_cache']['misses']} misses)")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,7 @@ MODULES = [
     ("dynamics bench", "benchmarks.dynamics_bench"),
     ("federation bench", "benchmarks.federation_bench"),
     ("serving fabric bench", "benchmarks.serving_bench"),
+    ("elastic training bench", "benchmarks.elastic_bench"),
     ("kernel  node-score bench", "benchmarks.kernel_bench"),
     ("§Roofline table", "benchmarks.roofline"),
 ]

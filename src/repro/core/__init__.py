@@ -1,10 +1,13 @@
 """Kant's core: cluster model, QSCH, RSCH, plugin framework, simulator,
-cluster dynamics, federation."""
+cluster dynamics, federation, elastic training."""
 
 from .cluster import ClusterState
 from .dynamics import (CheckpointModel, ClusterDynamics, DrainWindow,
                        DynamicsConfig, DynamicsSummary, GpuFailureInjector,
                        NodeFailureInjector, TidalAutoscaler, TidalService)
+from .elastic import (ElasticConfig, ElasticManager, ElasticSpec,
+                      GreedyElastic, ParallelismPlan, scaling_artifacts,
+                      spec_from_artifacts)
 from .events import Event, EventBus, EventKind
 from .federation import (FederatedCluster, FederatedResult,
                          FederatedSimulator, FederationSummary, GSCH,
@@ -13,7 +16,7 @@ from .framework import (CycleResult, PlacementPass, ProfileSet,
                         SchedulingProfile, default_profiles)
 from .job import (Job, JobKind, JobState, Placement, PodPlacement,
                   PRIO_HIGH, PRIO_LOW, PRIO_NORMAL, size_bucket)
-from .metrics import MetricsRecorder
+from .metrics import MetricsRecorder, waiting_percentile
 from .qsch import QSCH, QSCHConfig, QueuePolicy
 from .quota import QuotaManager, QuotaMode
 from .rsch import RSCH, RSCHConfig, Strategy, profiles_from_config
@@ -33,7 +36,8 @@ from .workload import (DEFAULT_QUERY_CLASSES, QueryClass, ServeRequest,
 __all__ = [
     "ClusterState", "Job", "JobKind", "JobState", "Placement",
     "PodPlacement", "PRIO_HIGH", "PRIO_LOW", "PRIO_NORMAL", "size_bucket",
-    "MetricsRecorder", "QSCH", "QSCHConfig", "QueuePolicy", "QuotaManager",
+    "MetricsRecorder", "waiting_percentile",
+    "QSCH", "QSCHConfig", "QueuePolicy", "QuotaManager",
     "QuotaMode", "RSCH", "RSCHConfig", "Strategy", "BINPACK", "E_BINPACK",
     "E_SPREAD", "SPREAD", "ScoreWeights", "combine_weights",
     "compute_node_scores", "node_scores_np", "select_gang_slots",
@@ -54,4 +58,7 @@ __all__ = [
     "FederatedCluster", "FederatedResult", "FederatedSimulator",
     "FederationSummary", "GSCH", "GSCHConfig", "MemberCluster",
     "make_member",
+    # elastic training (full surface in repro.core.elastic)
+    "ElasticSpec", "ParallelismPlan", "ElasticConfig", "ElasticManager",
+    "GreedyElastic", "spec_from_artifacts", "scaling_artifacts",
 ]

@@ -167,8 +167,11 @@ class ClusterDynamics:
             # overhead it started with.
             elapsed = max(0.0, t - (job.run_time if job.run_time
                                     is not None else t))
+            # Wall time converts to work at the active plan's relative
+            # throughput (1.0 for rigid jobs).
             attempt_work = max(
-                0.0, elapsed - self.config.recovery.attempt_overhead(job))
+                0.0, elapsed - self.config.recovery.attempt_overhead(job)
+            ) * job.work_rate
             job.original_duration = job.checkpointed_progress \
                 + attempt_work
             self.sim.pending_ends.pop(job.uid, None)

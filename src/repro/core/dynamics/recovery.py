@@ -50,11 +50,23 @@ class CheckpointModel:
         """Account a kill at time ``t``; returns ``(remaining, lost,
         overhead)``:
 
-        * ``remaining`` — wall seconds the next attempt needs (work left
-          after the surviving checkpoint, plus restart overhead);
-        * ``lost`` — recompute debt: progress this attempt that no
-          checkpoint captured;
+        * ``remaining`` — wall seconds the next attempt needs at the
+          job's CURRENT shape (work left after the surviving
+          checkpoint, plus restart overhead).  If an elastic job is
+          restarted at a different plan, the
+          :class:`~repro.core.elastic.manager.ElasticManager`
+          recomputes the attempt duration at placement time from the
+          same checkpoint state;
+        * ``lost`` — recompute debt: *wall* seconds this attempt spent
+          past its last checkpoint (metrics multiply by the shape that
+          burned them);
         * ``overhead`` — the restore cost added to the next attempt.
+
+        Elastic jobs progress at ``job.work_rate`` work-seconds per
+        wall second (1.0 for rigid jobs, making every expression below
+        bit-identical to the pre-elastic model): checkpoints still
+        happen every ``interval_s`` *wall* seconds, but the work they
+        persist is scaled by the rate.
 
         Mutates the job's checkpoint bookkeeping
         (``checkpointed_progress`` / ``lost_work`` /
@@ -64,9 +76,13 @@ class CheckpointModel:
         if job.run_time is not None:
             # Killed before the container came up -> no progress at all.
             elapsed = max(0.0, float(t) - job.run_time)
+        rate = job.work_rate
+        # Wall seconds of actual progress this attempt, capped at the
+        # wall time the remaining work takes at the active rate.
         progress = max(0.0, elapsed - self.attempt_overhead(job))
-        progress = min(progress,
-                       job.original_duration - job.checkpointed_progress)
+        work_left = job.original_duration - job.checkpointed_progress
+        if rate > 0:
+            progress = min(progress, work_left / rate)
 
         if job.kind is JobKind.TRAIN and self.mode == "checkpoint":
             saved = (progress // self.interval_s) * self.interval_s
@@ -77,11 +93,13 @@ class CheckpointModel:
             saved = progress
         lost = progress - saved
         job.checkpointed_progress = min(
-            job.original_duration, job.checkpointed_progress + saved)
+            job.original_duration, job.checkpointed_progress + saved * rate)
 
         overhead = self.restart_overhead_s
-        remaining = (job.original_duration - job.checkpointed_progress
-                     + overhead)
+        remaining_work = job.original_duration - job.checkpointed_progress
+        if rate > 0:
+            remaining_work = remaining_work / rate
+        remaining = remaining_work + overhead
         job.lost_work += lost
         job.restart_overhead += overhead
         return remaining, lost, overhead

@@ -1,0 +1,39 @@
+"""Elastic training: scheduler × parallelism co-design.
+
+A training job declares an :class:`ElasticSpec` — alternative DP×TP
+parallelism plans at different GPU counts, each with a throughput
+estimate (from the dry-run HLO roofline via
+:mod:`~repro.core.elastic.estimate`, or supplied directly) — and an
+**ElasticPolicy** plugin decides when to *shrink* the gang into
+currently-free fragmented capacity instead of queueing for the ideal
+shape, and when to *grow* it back at the next checkpoint boundary.
+Reshapes reuse the checkpoint-restart machinery
+(:mod:`repro.core.dynamics.recovery`): the cost is restart overhead
+plus work since the last checkpoint, and the simulator scales the
+remaining work by the active plan's relative throughput.
+
+* :mod:`~repro.core.elastic.spec`     — ParallelismPlan / ElasticSpec;
+* :mod:`~repro.core.elastic.estimate` — plan throughput from dry-run
+  artifacts (memoized, no jax);
+* :mod:`~repro.core.elastic.policy`   — the built-in GreedyElastic
+  policy (largest fitting plan, payback-gated grow);
+* :mod:`~repro.core.elastic.manager`  — the ElasticManager executing
+  decisions through QSCH.
+
+Enable with ``QSCH(..., elastic=ElasticManager())``; jobs without an
+``ElasticSpec`` are scheduled byte-identically to the rigid path (gated
+by ``benchmarks/elastic_bench.py``).  See ``docs/elastic.md``.
+"""
+
+from .estimate import (plan_cache, plan_cache_stats, scaling_artifacts,
+                       spec_from_artifacts, step_time_from_terms)
+from .manager import ElasticConfig, ElasticManager
+from .policy import GreedyElastic
+from .spec import ElasticSpec, ParallelismPlan
+
+__all__ = [
+    "ElasticSpec", "ParallelismPlan",
+    "ElasticConfig", "ElasticManager", "GreedyElastic",
+    "spec_from_artifacts", "scaling_artifacts", "step_time_from_terms",
+    "plan_cache", "plan_cache_stats",
+]

@@ -24,7 +24,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..job import Job, summarize_waits
-from ..metrics import MetricsRecorder
+from ..metrics import MetricsRecorder, waiting_percentile
+
+__all__ = ["jain_index", "waiting_percentile", "allocated_gar",
+           "FederatedMetrics"]
 
 
 def jain_index(values: Sequence[float]) -> float:
@@ -32,13 +35,6 @@ def jain_index(values: Sequence[float]) -> float:
     if len(v) == 0 or not (v > 0).any():
         return 1.0
     return float(v.sum() ** 2 / (len(v) * (v ** 2).sum()))
-
-
-def waiting_percentile(jobs: Sequence[Job], q: float) -> float:
-    """P<q> of job waiting times (s) over started jobs — the spillover
-    headline metric (P90 JWTD)."""
-    waits = [j.waiting_time for j in jobs if j.waiting_time is not None]
-    return float(np.percentile(waits, q)) if waits else 0.0
 
 
 def allocated_gar(jobs: Sequence[Job], capacity_gpus: int,

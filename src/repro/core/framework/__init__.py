@@ -19,11 +19,12 @@ See ``docs/plugins.md`` for the extension-point contract and a worked
 """
 
 from .api import (AdmitPlugin, ClusterSelectPlugin, CycleContext,
-                  CycleResult, DynamicsPlugin, FilterPlugin, PermitPlugin,
-                  PlacementPass, Plugin, PostBindPlugin, PreemptPlugin,
-                  ProfileSet, QueuePolicyPlugin, QueueSortPlugin,
-                  ReservePlugin, RouterPolicyPlugin, SchedulingContext,
-                  SchedulingProfile, ScorePlugin, single_pass_plan)
+                  CycleResult, DynamicsPlugin, ElasticPolicyPlugin,
+                  FilterPlugin, PermitPlugin, PlacementPass, Plugin,
+                  PostBindPlugin, PreemptPlugin, ProfileSet,
+                  QueuePolicyPlugin, QueueSortPlugin, ReservePlugin,
+                  RouterPolicyPlugin, SchedulingContext, SchedulingProfile,
+                  ScorePlugin, single_pass_plan)
 from .builtin import (BackfillHeadTimeout, BackfillPolicy,
                       BestEffortFIFOPolicy, BinpackScore, ColocateBonus,
                       DefaultQueueSort, DynamicFeasibility, GpuTypeFilter,
@@ -41,7 +42,8 @@ __all__ = [
     "Plugin", "QueueSortPlugin", "AdmitPlugin", "FilterPlugin",
     "ScorePlugin", "ReservePlugin", "PermitPlugin", "PostBindPlugin",
     "PreemptPlugin", "QueuePolicyPlugin", "DynamicsPlugin",
-    "ClusterSelectPlugin", "RouterPolicyPlugin", "PlacementPass",
+    "ClusterSelectPlugin", "RouterPolicyPlugin", "ElasticPolicyPlugin",
+    "PlacementPass",
     "SchedulingProfile", "ProfileSet", "SchedulingContext", "CycleContext",
     "CycleResult", "single_pass_plan",
     # registry

@@ -29,6 +29,10 @@ ClusterSelect   federation-level routing (repro.core.federation): which
 RouterPolicy    query-level routing (repro.serve): which model replica
                 serves an individual request, one level below
                 ClusterSelect
+ElasticPolicy   scheduler × parallelism co-design (repro.core.elastic):
+                which declared parallelism plan an elastic training job
+                runs at — shrink into fragmented capacity at placement,
+                grow back at a checkpoint boundary
 ==============  ======================================================
 
 **Score plugin contract** — every Score plugin declares whether its term
@@ -322,6 +326,42 @@ class ClusterSelectPlugin(Plugin):
         return None
 
     def score(self, job: Job, summary) -> Optional[np.ndarray]:
+        return None
+
+
+class ElasticPolicyPlugin(Plugin):
+    """Elastic-training extension point (:mod:`repro.core.elastic`):
+    decides which of a job's declared
+    :class:`~repro.core.elastic.spec.ParallelismPlan`s it runs at.
+
+    Both hooks are *advisory* — the
+    :class:`~repro.core.elastic.manager.ElasticManager` executes the
+    decision through the standard QSCH paths (placement via
+    ``try_place``, reshape via the checkpoint-interrupt machinery), so
+    plugins never mutate cluster state.  Jobs without an
+    :attr:`~repro.core.job.Job.elastic` spec never reach these hooks:
+    the non-elastic pipeline stays byte-identical.
+
+    * :meth:`select_plan` — called on every placement attempt of an
+      elastic job, against the cycle's working snapshot.  Return the
+      plan the attempt should use, or ``None`` to keep the ideal plan
+      (rigid behavior: queue/preempt for the full shape).  Returning a
+      smaller fitting plan is the **shrink** path — the gang starts in
+      currently-free fragmented capacity instead of waiting.
+    * :meth:`want_grow` — called once per cycle for each *running*
+      elastic job below its ideal plan, only at a checkpoint boundary
+      (reshaping restarts from the last checkpoint, see
+      ``docs/elastic.md``).  ``reshape_cost_s`` is the restart overhead
+      the recovery model will charge.  Return a strictly better target
+      plan to trigger the reshape, or ``None`` to keep running as-is.
+    """
+
+    def select_plan(self, job: Job, snap: Snapshot,
+                    ctx: Optional[CycleContext]):
+        return None
+
+    def want_grow(self, job: Job, snap: Snapshot,
+                  ctx: Optional[CycleContext], reshape_cost_s: float):
         return None
 
 

@@ -15,7 +15,10 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
+
+if TYPE_CHECKING:   # elastic imports JobKind; keep the cycle static-only
+    from .elastic.spec import ElasticSpec, ParallelismPlan
 
 
 class JobKind(enum.Enum):
@@ -90,6 +93,14 @@ class Job:
     # cross-region forwarding pays the locality penalty.  None = no
     # affinity (single-cluster runs never look at it).
     region: Optional[str] = None
+    # Elastic-training contract (repro.core.elastic): the menu of
+    # alternative parallelism plans this job may run at.  None (the
+    # default) keeps the job rigid — the scheduler never looks at it
+    # and every placement stays byte-identical to the classic path.
+    # The job's declared (n_pods, gpus_per_pod) must be the spec's
+    # ideal plan; ``duration``/``original_duration`` are ideal-plan
+    # seconds.
+    elastic: Optional["ElasticSpec"] = None
 
     # Mutable scheduling bookkeeping -----------------------------------
     state: JobState = JobState.PENDING
@@ -112,6 +123,11 @@ class Job:
     checkpointed_progress: float = 0.0      # work safely persisted (s)
     lost_work: float = 0.0                  # recompute debt accrued (s)
     restart_overhead: float = 0.0           # restore overhead accrued (s)
+    # Elastic bookkeeping: the plan the current/most recent attempt runs
+    # at (None until the ElasticManager picks one) and how many
+    # voluntary checkpoint-boundary reshapes the job has gone through.
+    active_plan: Optional["ParallelismPlan"] = None
+    reshape_count: int = 0
 
     def __post_init__(self) -> None:
         if self.n_pods <= 0 or self.gpus_per_pod <= 0:
@@ -121,10 +137,41 @@ class Job:
             raise ValueError("multi-pod training jobs must be gang jobs")
         if not self.original_duration:
             self.original_duration = self.duration
+        if self.elastic is not None:
+            self.elastic.validate_for(self)
 
     @property
     def n_gpus(self) -> int:
         return self.n_pods * self.gpus_per_pod
+
+    # -- elastic accounting (identity values for rigid jobs) -----------
+    @property
+    def work_rate(self) -> float:
+        """Relative progress rate of the active plan: 1.0 for rigid
+        jobs and for elastic jobs at their ideal plan; below 1.0 while
+        shrunk.  One wall second on the active shape advances
+        ``work_rate`` seconds of (ideal-plan) work."""
+        if self.elastic is None or self.active_plan is None:
+            return 1.0
+        return self.active_plan.throughput / self.elastic.ideal().throughput
+
+    @property
+    def ideal_n_gpus(self) -> int:
+        """GPU count of the ideal plan — the plan-independent yardstick
+        goodput accounting multiplies completed work by."""
+        if self.elastic is None:
+            return self.n_gpus
+        return self.elastic.ideal().n_gpus
+
+    def apply_plan(self, plan: "ParallelismPlan") -> None:
+        """Adopt ``plan`` as the next attempt's shape.  Only legal
+        while the job is not bound to devices (quota charges and the
+        allocator validate against the current shape)."""
+        if self.state is JobState.RUNNING:
+            raise ValueError("cannot reshape a bound job in place")
+        self.n_pods = plan.n_pods
+        self.gpus_per_pod = plan.gpus_per_pod
+        self.active_plan = plan
 
     @property
     def waiting_time(self) -> Optional[float]:

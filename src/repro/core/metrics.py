@@ -23,6 +23,15 @@ Dynamics metrics (see ``docs/dynamics.md`` for definitions):
   checkpoints and recomputing work since the last checkpoint;
 * **interrupted JTTED** — topology deviation of restarted placements
   only (do rescheduled gangs land in worse topology?).
+
+Elastic accounting (``repro.core.elastic``): completed work is credited
+at the **ideal plan's** GPU count — a plan-independent yardstick, so
+elastic and rigid runs of the same trace compare on identical units
+(and non-elastic jobs are untouched: ``ideal_n_gpus == n_gpus``).
+Voluntary checkpoint-boundary reshapes flow through
+:meth:`MetricsRecorder.on_job_interrupted` with ``reshape=True``: their
+cost lands in the shared lost/overhead totals *and* in the dedicated
+reshape aggregates, but records no MTTR sample (nothing failed).
 """
 
 from __future__ import annotations
@@ -35,6 +44,14 @@ import numpy as np
 from .cluster import ClusterState
 from .job import Job, JobKind, SIZE_BUCKETS, size_bucket
 from .topology import ClusterTopology
+
+
+def waiting_percentile(jobs: Sequence[Job], q: float) -> float:
+    """P<q> of job waiting times (s) over started jobs — the headline
+    tail-latency metric (P90 JWTD) shared by the federation and elastic
+    benchmarks."""
+    waits = [j.waiting_time for j in jobs if j.waiting_time is not None]
+    return float(np.percentile(waits, q)) if waits else 0.0
 
 
 @dataclasses.dataclass
@@ -79,6 +96,9 @@ class MetricsRecorder:
         self.useful_gpu_seconds: float = 0.0          # completed work
         self.lost_gpu_seconds: float = 0.0            # recompute debt
         self.overhead_gpu_seconds: float = 0.0        # restart overhead
+        # Elastic reshaping (voluntary checkpoint-boundary interrupts).
+        self.reshapes: int = 0
+        self.reshape_gpu_seconds: float = 0.0
 
     # ------------------------------------------------------------------
     def sample(self, t: float, state: ClusterState, queue_depth: int = 0,
@@ -136,15 +156,28 @@ class MetricsRecorder:
     def on_job_finished(self, job: Job) -> None:
         self._finished.append(job)
         # Completed jobs delivered their full useful work, whatever got
-        # recomputed along the way.
-        self.useful_gpu_seconds += job.original_duration * job.n_gpus
+        # recomputed along the way — credited at the ideal plan's GPU
+        # count (== n_gpus for rigid jobs) so elastic and rigid runs
+        # measure goodput in the same units.
+        self.useful_gpu_seconds += job.original_duration * job.ideal_n_gpus
 
     def on_job_interrupted(self, job: Job, t: float, lost_work: float,
-                           overhead: float) -> None:
+                           overhead: float, reshape: bool = False) -> None:
         """A failure/drain killed the job at ``t``: ``lost_work`` seconds
         since its last checkpoint must be recomputed and ``overhead``
-        seconds of restore cost were added to the next attempt."""
-        self._interrupted_at[job.uid] = float(t)
+        seconds of restore cost were added to the next attempt.
+
+        ``reshape=True`` marks a *voluntary* checkpoint-boundary
+        reshape (elastic grow): same cost accounting against the shape
+        that burned it, but no MTTR sample — nothing failed — and the
+        cost is additionally tracked in the reshape aggregates the
+        elastic benchmark budgets."""
+        if reshape:
+            self.reshapes += 1
+            self.reshape_gpu_seconds += (max(0.0, lost_work)
+                                         + max(0.0, overhead)) * job.n_gpus
+        else:
+            self._interrupted_at[job.uid] = float(t)
         self.lost_gpu_seconds += max(0.0, lost_work) * job.n_gpus
         self.overhead_gpu_seconds += max(0.0, overhead) * job.n_gpus
 
@@ -236,6 +269,13 @@ class MetricsRecorder:
             return 0.0
         return self.useful_gpu_seconds / self._gpu_seconds_alloc
 
+    def reshape_overhead_fraction(self) -> float:
+        """Reshape cost / useful work delivered — the elastic
+        benchmark's ≤10% budget."""
+        if self.useful_gpu_seconds <= 0:
+            return 0.0
+        return self.reshape_gpu_seconds / self.useful_gpu_seconds
+
     def report(self) -> Dict[str, object]:
         return {
             "median_gar": self.median_gar(),
@@ -249,5 +289,7 @@ class MetricsRecorder:
             "mttr": self.mttr(),
             "lost_gpu_seconds": self.lost_gpu_seconds,
             "overhead_gpu_seconds": self.overhead_gpu_seconds,
+            "reshapes": self.reshapes,
+            "reshape_gpu_seconds": self.reshape_gpu_seconds,
             "interrupted_jtted": self.interrupted_jtted_by_bucket(),
         }

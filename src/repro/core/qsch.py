@@ -83,11 +83,16 @@ class QSCH:
     def __init__(self, quota: QuotaManager, rsch: RSCH,
                  config: Optional[QSCHConfig] = None,
                  incremental_snapshots: bool = True,
-                 queue_policy=None) -> None:
+                 queue_policy=None, elastic=None) -> None:
         self.quota = quota
         self.rsch = rsch
         self.config = config or QSCHConfig()
         self.queue_policy = queue_policy or _policy_from_config(self.config)
+        # Elastic-training manager (repro.core.elastic), or None for the
+        # classic rigid-gang scheduler.  Jobs without an ElasticSpec are
+        # never touched either way (byte-identity gate in
+        # benchmarks/elastic_bench.py).
+        self.elastic = elastic
         self.snapshotter = (IncrementalSnapshotter()
                             if incremental_snapshots else FullSnapshotter())
         # Tenant queues (§3.2.2): submission order is kept per tenant; the
@@ -172,17 +177,20 @@ class QSCH:
                     global_queue.append(job)
                 else:
                     result.admit_rejected += 1
-            if not global_queue:
-                return result
+            if global_queue:
+                self.queue_policy.run_cycle(global_queue, ctx)
 
-            self.queue_policy.run_cycle(global_queue, ctx)
-
-            # Preempt chain (§3.2.3): if the highest-priority pending job
-            # is still blocked, conservatively evict work that provably
-            # unblocks it (priority first, then quota reclamation).
-            if (self.config.priority_preemption and result.blocked_head
-                    is not None):
-                self._run_preempt_chain(result.blocked_head, ctx)
+                # Preempt chain (§3.2.3): if the highest-priority pending
+                # job is still blocked, conservatively evict work that
+                # provably unblocks it (priority, then quota reclamation).
+                if (self.config.priority_preemption and result.blocked_head
+                        is not None):
+                    self._run_preempt_chain(result.blocked_head, ctx)
+            # Elastic grow pass: running shrunk gangs may reshape toward
+            # their ideal plan at a checkpoint boundary — runs even with
+            # an empty queue (freed capacity is what triggers growth).
+            if self.elastic is not None:
+                self.elastic.grow_pass(ctx)
             return result
         finally:
             self._working_snap = None
@@ -208,6 +216,10 @@ class QSCH:
     def try_place(self, job: Job, ctx: CycleContext,
                   backfilled: bool = False) -> bool:
         result = ctx.result
+        # Elastic plan selection runs FIRST: admission, quota and
+        # placement below all see the shape this attempt actually binds.
+        if self.elastic is not None and job.elastic is not None:
+            self.elastic.select_shape(job, ctx)
         # Re-check static quota: earlier placements in this cycle may have
         # consumed it since the global-queue filter ran (§3.2.1).
         if not self.static_admit(job, ctx):

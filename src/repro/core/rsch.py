@@ -168,12 +168,22 @@ class RSCH:
         like the legacy check) — otherwise a restrictive custom filter
         would let admission pass forever while placement always fails.
         """
+        return self.feasible_shape(job, snap, job.n_pods,
+                                   job.gpus_per_pod)
+
+    def feasible_shape(self, job: Job, snap: Snapshot, n_pods: int,
+                       gpus_per_pod: int) -> bool:
+        """Would ``job`` pass dynamic resource admission at a
+        *hypothetical* ``(n_pods, gpus_per_pod)`` shape?  The elastic
+        subsystem enumerates a job's candidate parallelism plans
+        through this check without ever mutating the job; with the
+        job's own shape it IS :meth:`feasible`."""
         pool, _ = self._resolve_pool(job, snap, self.profile_for(job),
                                      None)
-        per_node_ok = snap.free_gpus >= job.gpus_per_pod
-        capacity = int((snap.free_gpus // job.gpus_per_pod)[
+        per_node_ok = snap.free_gpus >= gpus_per_pod
+        capacity = int((snap.free_gpus // gpus_per_pod)[
             pool & per_node_ok].sum())
-        return capacity >= job.n_pods
+        return capacity >= n_pods
 
     def schedule(self, job: Job, snap: Snapshot,
                  ctx: Optional[SchedulingContext] = None) -> ScheduleResult:

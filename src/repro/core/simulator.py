@@ -76,6 +76,11 @@ class Simulator:
         self.qsch = qsch
         self.config = config or SimConfig()
         self.metrics = MetricsRecorder(state.topology)
+        elastic = getattr(qsch, "elastic", None)
+        if elastic is not None:
+            # Voluntary reshapes report through the same recorder as
+            # failures (flagged, so MTTR stays failure-only).
+            elastic.bind_metrics(self.metrics)
         self.bus = EventBus()
         self.now = 0.0
         self.cycles = 0
@@ -171,6 +176,11 @@ class Simulator:
             from .dynamics.engine import ClusterDynamics
             self._engine = ClusterDynamics(self.config.dynamics)
             self._engine.attach(self)
+            elastic = getattr(self.qsch, "elastic", None)
+            if elastic is not None:
+                # One checkpoint model for failures AND reshapes unless
+                # the elastic config pinned its own.
+                elastic.adopt_recovery(self.config.dynamics.recovery)
 
     def prime(self, jobs: Sequence[Job]) -> List[Job]:
         """Attach dynamics, enqueue submissions, start the TICK/SAMPLE

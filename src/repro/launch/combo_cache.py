@@ -1,0 +1,84 @@
+"""Keyed memoization for (arch × shape × mesh) combo work.
+
+The dry-run pipeline lowers and analyses the same (architecture, input
+shape, mesh) combo over and over when a job's candidate parallelism
+plans are enumerated — re-lowering an identical combo is pure waste.
+:class:`ComboCache` is the shared memo: :mod:`repro.launch.dryrun`
+keys its ``lower_combo``/``analyse`` results on the combo tuple, and
+:mod:`repro.core.elastic.estimate` keys derived plan tables the same
+way.
+
+This module is deliberately **jax-free**: ``dryrun.py`` must be the
+process entry point (it sets ``XLA_FLAGS`` before importing jax), so
+tests and the elastic benchmark exercise the cache through here without
+ever importing the dry-run module.  Hit/miss counters are first-class:
+``benchmarks/elastic_bench.py`` reports them as its cache-efficiency
+figure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Hashable, Optional, Tuple
+
+__all__ = ["ComboCache", "mesh_key"]
+
+
+def mesh_key(mesh) -> Tuple[Tuple[str, int], ...]:
+    """Stable cache key for a mesh: its named axes and their sizes.
+    Duck-typed over ``jax.sharding.Mesh`` (``axis_names`` + ``shape``)
+    so key construction needs no jax import."""
+    shape = mesh.shape   # Mapping[axis name, size] on jax meshes
+    return tuple((str(name), int(shape[name])) for name in mesh.axis_names)
+
+
+class ComboCache:
+    """A dict-backed memo with hit/miss accounting.
+
+    Not thread-safe (neither is the dry-run pipeline); ``clear()``
+    resets both entries and counters so benchmarks can measure one
+    phase in isolation.
+    """
+
+    def __init__(self, name: str = "combo") -> None:
+        self.name = name
+        self.hits = 0
+        self.misses = 0
+        self._data: Dict[Hashable, Any] = {}
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._data
+
+    # ------------------------------------------------------------------
+    def get(self, key: Hashable) -> Optional[Any]:
+        """Counted lookup: a present key is a hit, a missing one a miss
+        (the caller is expected to compute and :meth:`put`)."""
+        if key in self._data:
+            self.hits += 1
+            return self._data[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, value: Any) -> Any:
+        self._data[key] = value
+        return value
+
+    def get_or(self, key: Hashable, compute: Callable[[], Any]) -> Any:
+        """Memoized call: one hit or one miss per invocation."""
+        if key in self._data:
+            self.hits += 1
+            return self._data[key]
+        self.misses += 1
+        return self.put(key, compute())
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {"name": self.name, "hits": self.hits,
+                "misses": self.misses, "size": len(self._data)}
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = 0
+        self.misses = 0

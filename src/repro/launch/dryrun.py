@@ -51,7 +51,37 @@ from ..sharding.auto import (ShardingRules, batch_specs,
                              cache_specs_sharding, param_shardings)
 from ..train.optim import opt_specs
 from ..train.step import make_train_step
+from .combo_cache import ComboCache, mesh_key
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+
+# Memoization for sweeps that revisit (arch × shape × mesh) combos —
+# e.g. elastic-plan estimation probing one architecture at several chip
+# counts.  Custom ``rules`` objects bypass the cache (their sharding is
+# not captured by the key).  ``cache_stats()`` feeds the benchmarks'
+# hit counters.
+_LOWER_CACHE = ComboCache("dryrun-lower")
+_ANALYSE_CACHE = ComboCache("dryrun-analyse")
+# id(lowered) -> combo key, so analyse() can reuse the lowering's key
+# without re-deriving it from jax objects.
+_LOWERED_KEY: Dict[int, tuple] = {}
+
+
+def _combo_key(cfg: ArchConfig, shape: InputShape, mesh, *, remat: bool,
+               microbatches: int, seq_shard: bool,
+               bf16_moments: bool) -> tuple:
+    return (cfg.name, shape.name, mesh_key(mesh), bool(remat),
+            int(microbatches), bool(seq_shard), bool(bf16_moments))
+
+
+def cache_stats() -> Dict[str, Dict[str, Any]]:
+    """Hit/miss/size counters of the lowering + analysis memo caches."""
+    return {c.name: c.stats() for c in (_LOWER_CACHE, _ANALYSE_CACHE)}
+
+
+def clear_caches() -> None:
+    _LOWER_CACHE.clear()
+    _ANALYSE_CACHE.clear()
+    _LOWERED_KEY.clear()
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8,
                 "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
@@ -116,8 +146,19 @@ def lower_combo(cfg: ArchConfig, shape: InputShape, mesh, *,
                 rules: Optional[ShardingRules] = None,
                 remat: bool = True, microbatches: int = 1,
                 seq_shard: bool = False, bf16_moments: bool = False):
-    """Build the jitted step for one (arch × shape) and lower it."""
+    """Build the jitted step for one (arch × shape) and lower it.
+
+    Memoized on (arch, shape, mesh axes, remat, microbatches,
+    seq_shard, bf16_moments) unless explicit ``rules`` are passed."""
     from ..sharding.context import use_activation_sharding
+    key = None
+    if rules is None:
+        key = _combo_key(cfg, shape, mesh, remat=remat,
+                         microbatches=microbatches, seq_shard=seq_shard,
+                         bf16_moments=bf16_moments)
+        cached = _LOWER_CACHE.get(key)
+        if cached is not None:
+            return cached
     rules = rules or ShardingRules(mesh)
     model = Model(cfg)
     p_specs = model.param_specs(jnp.bfloat16)
@@ -161,6 +202,9 @@ def lower_combo(cfg: ArchConfig, shape: InputShape, mesh, *,
                              out_shardings=(None, c_shard),
                              donate_argnums=(1,))
             lowered = jitted.lower(p_specs, c_specs, b_specs["token"])
+    if key is not None:
+        _LOWER_CACHE.put(key, lowered)
+        _LOWERED_KEY[id(lowered)] = key
     return lowered
 
 
@@ -180,6 +224,16 @@ def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
 def analyse(lowered, cfg: ArchConfig, shape: InputShape, n_chips: int
             ) -> Dict[str, Any]:
     from .hlo_analysis import analyse_hlo_text
+    # Memoized when the lowering came out of lower_combo's cache path:
+    # compile + HLO reanalysis dominate a sweep's wall time.  Callers
+    # get a fresh dict (run_one mutates its result).
+    memo_key = None
+    lkey = _LOWERED_KEY.get(id(lowered))
+    if lkey is not None:
+        memo_key = (lkey, int(n_chips))
+        cached = _ANALYSE_CACHE.get(memo_key)
+        if cached is not None:
+            return dict(cached)
     t0 = time.time()
     compiled = lowered.compile()
     compile_s = time.time() - t0
@@ -224,6 +278,8 @@ def analyse(lowered, cfg: ArchConfig, shape: InputShape, n_chips: int
              "memory": result["memory_term_s"],
              "collective": result["collective_term_s"]}
     result["dominant_term"] = max(terms, key=terms.get)
+    if memo_key is not None:
+        _ANALYSE_CACHE.put(memo_key, dict(result))
     return result
 
 

@@ -1,0 +1,388 @@
+"""Elastic training subsystem: ElasticSpec contract, rate-scaled
+checkpoint recovery (including restarts at a different GPU count),
+shrink-into-fragments placement, checkpoint-boundary grow, byte-identity
+of the rigid path, and the combo-cache memoization."""
+
+import pytest
+
+from repro.core import (CheckpointModel, ClusterState, DynamicsConfig,
+                        ElasticConfig, ElasticManager, ElasticSpec,
+                        EventKind, GreedyElastic, Job, JobKind, JobState,
+                        ParallelismPlan, QSCH, QSCHConfig, QuotaManager,
+                        RSCH, RSCHConfig, SimConfig, Simulator,
+                        scaling_artifacts, spec_from_artifacts,
+                        training_trace, waiting_percentile)
+from repro.core.elastic import plan_cache, step_time_from_terms
+from repro.core.framework import DynamicsPlugin
+from repro.launch.combo_cache import ComboCache, mesh_key
+
+from conftest import make_qsch
+
+
+def make_spec():
+    """Ideal 8x8 (64 GPUs), shrinkable to 4x8 at 0.6 and 2x8 at 0.3."""
+    return ElasticSpec(plans=(ParallelismPlan(8, 8, 1.0),
+                              ParallelismPlan(4, 8, 0.6),
+                              ParallelismPlan(2, 8, 0.3)))
+
+
+def elastic_job(uid=1, duration=3600.0, submit=0.0, spec=None,
+                tenant="t0"):
+    spec = spec or make_spec()
+    ideal = spec.ideal()
+    return Job(uid=uid, tenant=tenant, gpu_type=0, n_pods=ideal.n_pods,
+               gpus_per_pod=ideal.gpus_per_pod, submit_time=submit,
+               duration=duration, preemptible=True, elastic=spec)
+
+
+def rigid_job(uid, n_pods, duration, submit=0.0, priority=50):
+    return Job(uid=uid, tenant="t0", gpu_type=0, n_pods=n_pods,
+               gpus_per_pod=8, submit_time=submit, duration=duration,
+               priority=priority, preemptible=True)
+
+
+def make_elastic_sim(topo, state, *, dynamics=None, horizon=None,
+                     manager=None):
+    qm = QuotaManager({"t0": {0: 1024}})
+    rsch = RSCH(topo, RSCHConfig())
+    qsch = QSCH(qm, rsch, QSCHConfig(),
+                elastic=manager or ElasticManager())
+    return Simulator(state, qsch,
+                     SimConfig(tick_interval=30.0, sample_interval=300.0,
+                               binding_latency=0.0, horizon=horizon,
+                               dynamics=dynamics))
+
+
+# ----------------------------------------------------------------------
+# Spec contract
+# ----------------------------------------------------------------------
+def test_spec_ordering_and_lookup():
+    spec = make_spec()
+    assert spec.ideal().shape == (8, 8)
+    assert [p.n_gpus for p in spec.by_throughput()] == [64, 32, 16]
+    assert spec.plan_for(4, 8).throughput == 0.6
+    assert spec.plan_for(3, 8) is None
+    assert spec.min_gpus() == 16
+
+
+def test_spec_rejects_duplicates_and_bad_plans():
+    with pytest.raises(ValueError):
+        ElasticSpec(plans=(ParallelismPlan(2, 8, 1.0),
+                           ParallelismPlan(2, 8, 0.5)))
+    with pytest.raises(ValueError):
+        ParallelismPlan(0, 8, 1.0)
+    with pytest.raises(ValueError):
+        ParallelismPlan(2, 8, 0.0)
+    with pytest.raises(ValueError):
+        ElasticSpec(plans=())
+
+
+def test_spec_validates_job_at_construction():
+    spec = make_spec()
+    # Shape must equal the ideal plan's shape.
+    with pytest.raises(ValueError):
+        Job(uid=1, tenant="t0", gpu_type=0, n_pods=4, gpus_per_pod=8,
+            duration=100.0, elastic=spec)
+    # Gang-scheduled training only.
+    with pytest.raises(ValueError):
+        Job(uid=1, tenant="t0", gpu_type=0, n_pods=8, gpus_per_pod=8,
+            duration=100.0, kind=JobKind.INFER, gang=False, elastic=spec)
+
+
+def test_from_throughputs_packs_at_node_granularity():
+    spec = ElasticSpec.from_throughputs([(64, 1.0), (32, 0.6), (4, 0.1)])
+    assert spec.plan_for(8, 8).throughput == 1.0
+    assert spec.plan_for(4, 8).throughput == 0.6
+    assert spec.plan_for(1, 4).throughput == 0.1
+    with pytest.raises(ValueError):
+        ElasticSpec.from_throughputs([(12, 0.5)])   # not a node multiple
+
+
+def test_job_work_rate_defaults():
+    job = rigid_job(uid=1, n_pods=2, duration=100.0)
+    assert job.work_rate == 1.0
+    assert job.ideal_n_gpus == 16
+    ej = elastic_job()
+    assert ej.work_rate == 1.0                       # ideal until shrunk
+    assert ej.ideal_n_gpus == 64
+    ej.apply_plan(ej.elastic.plan_for(4, 8))
+    assert ej.work_rate == 0.6
+    assert ej.n_gpus == 32
+    assert ej.ideal_n_gpus == 64                     # yardstick unchanged
+    ej.state = JobState.RUNNING
+    with pytest.raises(ValueError):
+        ej.apply_plan(ej.elastic.ideal())
+
+
+# ----------------------------------------------------------------------
+# Rate-scaled checkpoint recovery (satellite: different-GPU-count
+# restarts must account work at the active plan's throughput)
+# ----------------------------------------------------------------------
+def test_recovery_scales_progress_by_work_rate():
+    model = CheckpointModel(interval_s=600.0, restart_overhead_s=120.0)
+    job = elastic_job(duration=3600.0)
+    job.apply_plan(job.elastic.plan_for(4, 8))       # rate 0.6
+    job.run_time = 0.0
+    remaining, lost, overhead = model.on_interrupt(job, 1450.0)
+    # 1450 wall seconds at rate 0.6; checkpoints land on wall boundaries
+    # (600, 1200), so 1200 wall = 720 work survive and 250 wall is lost.
+    assert job.checkpointed_progress == pytest.approx(720.0)
+    assert lost == pytest.approx(250.0)
+    assert overhead == 120.0
+    # Remaining wall time is quoted at the STILL-ACTIVE shrunk plan.
+    assert remaining == pytest.approx((3600.0 - 720.0) / 0.6 + 120.0)
+    # A restart at the ideal plan (different GPU count) would need
+    # (3600 - 720) / 1.0 + 120 instead — select_shape's formula.
+    assert (job.original_duration - job.checkpointed_progress) / 1.0 \
+        + 120.0 == pytest.approx(3000.0)
+
+
+def test_recovery_caps_progress_at_remaining_work():
+    # A shrunk attempt cannot checkpoint more work than the job has.
+    model = CheckpointModel(interval_s=600.0, restart_overhead_s=120.0)
+    spec = ElasticSpec(plans=(ParallelismPlan(4, 8, 1.0),
+                              ParallelismPlan(2, 8, 0.5)))
+    job = Job(uid=1, tenant="t0", gpu_type=0, n_pods=4, gpus_per_pod=8,
+              duration=600.0, elastic=spec)
+    job.apply_plan(spec.plan_for(2, 8))              # rate 0.5
+    job.run_time = 0.0
+    # 1450 wall elapsed but the whole job is only 600/0.5 = 1200 wall:
+    # everything checkpoints, nothing is lost.
+    remaining, lost, _ = model.on_interrupt(job, 1450.0)
+    assert job.checkpointed_progress == pytest.approx(600.0)
+    assert lost == 0.0
+    assert remaining == pytest.approx(120.0)
+
+
+def test_recovery_rate_one_matches_rigid_math():
+    # An elastic job running at its ideal plan must account exactly like
+    # the rigid path (byte-identity of the arithmetic).
+    model = CheckpointModel(interval_s=600.0, restart_overhead_s=120.0)
+    job = elastic_job(duration=3600.0)
+    job.apply_plan(job.elastic.ideal())
+    job.run_time = 0.0
+    remaining, lost, _ = model.on_interrupt(job, 1450.0)
+    assert job.checkpointed_progress == 1200.0
+    assert lost == 250.0
+    assert remaining == 3600.0 - 1200.0 + 120.0
+
+
+def test_failure_restart_at_smaller_gpu_count(topo, state):
+    # End to end: a 64-GPU elastic job loses 10 of 16 nodes at t=650 and
+    # must restart in the surviving 48 GPUs at the 32-GPU plan, with the
+    # new attempt's wall duration quoted at that plan's throughput.
+    events = [(650.0, EventKind.NODE_FAIL, {"node": n})
+              for n in range(10)]
+    events += [(100_000.0, EventKind.NODE_RECOVER, {"node": n})
+               for n in range(10)]
+
+    class Scripted(DynamicsPlugin):
+        name = "ScriptedElastic"
+
+        def schedule(self, engine, rng):
+            return events
+
+    dyn = DynamicsConfig(plugins=[Scripted()],
+                         recovery=CheckpointModel(interval_s=600.0,
+                                                  restart_overhead_s=120.0))
+    sim = make_elastic_sim(topo, state, dynamics=dyn)
+    job = elastic_job(duration=3600.0)
+    result = sim.run([job])
+    assert job.state is JobState.COMPLETED
+    assert job.interrupt_count == 1 and job.attempt == 1
+    # First attempt at the ideal plan: checkpoint at 600 work-seconds.
+    assert job.checkpointed_progress == 600.0
+    assert job.n_gpus == 32                          # finished shrunk
+    assert job.active_plan.throughput == 0.6
+    # Second attempt: 120 restore + (3600 - 600) work at rate 0.6.
+    assert job.end_time - job.run_time == pytest.approx(
+        120.0 + 3000.0 / 0.6)
+    # Goodput credits the ideal shape regardless of the finishing plan.
+    assert result.metrics.useful_gpu_seconds == 3600.0 * 64
+    assert result.metrics.reshapes == 0              # forced, not chosen
+    state.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# Shrink: start now in fragmented capacity instead of queueing
+# ----------------------------------------------------------------------
+def test_shrinks_into_fragmented_capacity(topo, state):
+    sim = make_elastic_sim(topo, state)
+    blocker = rigid_job(uid=1, n_pods=12, duration=10_000.0,
+                        priority=90)                 # leaves 4 nodes free
+    job = elastic_job(uid=2, duration=3600.0)
+    sim.run([blocker, job])
+    assert job.state is JobState.COMPLETED
+    assert job.start_time == blocker.start_time, "no queueing"
+    assert job.n_gpus == 32 and job.active_plan.throughput == 0.6
+    # Wall time stretched by the inverse rate.
+    assert job.end_time - job.run_time == pytest.approx(3600.0 / 0.6)
+    state.check_invariants()
+
+
+def test_min_rate_floor_queues_instead_of_crawling(topo, state):
+    # Only 2 nodes free: the 16-GPU plan fits but sits below the policy
+    # floor (0.3 < min_rate=0.5), so the job queues for the ideal shape.
+    manager = ElasticManager(ElasticConfig(
+        policy=GreedyElastic(min_rate=0.5)))
+    sim = make_elastic_sim(topo, state, manager=manager)
+    blocker = rigid_job(uid=1, n_pods=14, duration=2000.0, priority=90)
+    job = elastic_job(uid=2, duration=600.0)
+    sim.run([blocker, job])
+    assert job.state is JobState.COMPLETED
+    assert job.n_gpus == 64, "waited for the ideal shape"
+    assert job.run_time >= 2000.0
+    state.check_invariants()
+
+
+# ----------------------------------------------------------------------
+# Grow: reshape back toward the ideal plan at a checkpoint boundary
+# ----------------------------------------------------------------------
+def test_grows_at_checkpoint_boundary_when_capacity_frees(topo, state):
+    sim = make_elastic_sim(topo, state)
+    blocker = rigid_job(uid=1, n_pods=12, duration=650.0, priority=90)
+    job = elastic_job(uid=2, duration=7200.0)
+    result = sim.run([blocker, job])
+    assert job.state is JobState.COMPLETED
+    assert job.n_gpus == 64, "grew back to the ideal plan"
+    assert job.reshape_count == 1
+    assert result.metrics.reshapes == 1
+    # The voluntary reshape charged the OLD (32-GPU) shape and recorded
+    # no MTTR sample (nothing failed).
+    assert result.metrics.reshape_gpu_seconds > 0
+    assert result.metrics.reshape_gpu_seconds == pytest.approx(
+        (result.metrics.lost_gpu_seconds
+         + result.metrics.overhead_gpu_seconds))
+    assert result.metrics.mttr() == 0.0
+    # Grow boundary slack bounds the lost work: < one checkpoint.
+    assert job.lost_work < 600.0
+    # Goodput = blocker + elastic job at its IDEAL shape.
+    assert result.metrics.useful_gpu_seconds == 650.0 * 96 + 7200.0 * 64
+    state.check_invariants()
+
+
+def test_no_grow_without_payback(topo, state):
+    # Near-finished job: the wall time saved cannot cover the reshape
+    # cost, so the policy must leave it alone.
+    manager = ElasticManager(ElasticConfig(
+        policy=GreedyElastic(grow_payback=2.0)))
+    sim = make_elastic_sim(topo, state, manager=manager)
+    blocker = rigid_job(uid=1, n_pods=12, duration=650.0, priority=90)
+    # 400 work-seconds at rate 0.6 ≈ 667 wall: growing saves ~267 wall,
+    # less than 2 x 120 restart overhead.
+    job = elastic_job(uid=2, duration=400.0)
+    result = sim.run([blocker, job])
+    assert job.state is JobState.COMPLETED
+    assert job.reshape_count == 0
+    assert result.metrics.reshapes == 0
+    assert job.n_gpus == 32, "finished at the shrunk plan"
+
+
+def test_scratch_recovery_never_grows(topo, state):
+    manager = ElasticManager(ElasticConfig(
+        recovery=CheckpointModel(interval_s=600.0,
+                                 restart_overhead_s=120.0,
+                                 mode="scratch")))
+    sim = make_elastic_sim(topo, state, manager=manager)
+    blocker = rigid_job(uid=1, n_pods=12, duration=650.0, priority=90)
+    job = elastic_job(uid=2, duration=7200.0)
+    result = sim.run([blocker, job])
+    assert job.state is JobState.COMPLETED
+    assert job.reshape_count == 0 and result.metrics.reshapes == 0
+
+
+# ----------------------------------------------------------------------
+# Byte-identity: no ElasticSpec -> the rigid path, exactly
+# ----------------------------------------------------------------------
+def test_manager_without_specs_is_byte_identical(topo):
+    def run(with_manager):
+        st = ClusterState.create(topo)
+        if with_manager:
+            sim = make_elastic_sim(topo, st)
+        else:
+            qsch = make_qsch(topo, st)
+            sim = Simulator(st, qsch,
+                            SimConfig(tick_interval=30.0,
+                                      sample_interval=300.0,
+                                      binding_latency=0.0))
+        jobs = [j for j in training_trace(40, seed=3,
+                                          arrival_rate_per_hour=900,
+                                          mean_duration_s=900.0)
+                if j.n_gpus <= 64]
+        res = sim.run(jobs)
+        return ([(j.uid, j.start_time, j.end_time,
+                  tuple((p.node, p.gpu_indices) for p in j.placement.pods))
+                 for j in res.jobs if j.placement],
+                res.metrics.report())
+
+    assert run(True) == run(False)
+
+
+# ----------------------------------------------------------------------
+# Promoted waiting_percentile
+# ----------------------------------------------------------------------
+def test_waiting_percentile_promoted_and_reexported():
+    from repro.core.federation import waiting_percentile as fed_wp
+    assert fed_wp is waiting_percentile
+    jobs = [rigid_job(uid=i, n_pods=1, duration=10.0) for i in range(4)]
+    for i, j in enumerate(jobs[:3]):
+        j.start_time = j.submit_time + 100.0 * i    # waits 0/100/200
+    assert waiting_percentile(jobs, 50.0) == pytest.approx(100.0)
+    assert waiting_percentile([], 90.0) == 0.0
+
+
+# ----------------------------------------------------------------------
+# Combo cache + plan estimation
+# ----------------------------------------------------------------------
+def test_combo_cache_counters():
+    c = ComboCache("t")
+    assert c.get("k") is None
+    assert c.stats() == {"name": "t", "hits": 0, "misses": 1, "size": 0}
+    c.put("k", 5)
+    assert c.get("k") == 5 and c.hits == 1
+    assert c.get_or("j", lambda: 7) == 7             # miss + compute
+    assert c.get_or("j", lambda: 0) == 7             # hit, not recomputed
+    assert len(c) == 2 and "j" in c
+    c.clear()
+    assert c.stats() == {"name": "t", "hits": 0, "misses": 0, "size": 0}
+
+
+def test_mesh_key_duck_typed():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 8}
+
+    assert mesh_key(FakeMesh()) == (("data", 16), ("model", 8))
+
+
+def test_step_time_and_scaling_artifacts():
+    arts = scaling_artifacts("gpt", "small", [32, 64, 128],
+                             base_step_s=1.0, alpha=0.85)
+    by_chips = {a["chips"]: a for a in arts}
+    assert step_time_from_terms(by_chips[128]) == pytest.approx(1.0)
+    # Throughput grows sublinearly: 2x chips < 2x throughput.
+    t64 = 1.0 / step_time_from_terms(by_chips[64])
+    t128 = 1.0 / step_time_from_terms(by_chips[128])
+    assert t64 < t128 < 2.0 * t64
+    with pytest.raises(ValueError):
+        step_time_from_terms({"compute_term_s": 0.0})
+
+
+def test_spec_from_artifacts_memoized():
+    cache = plan_cache()
+    cache.clear()
+    arts = scaling_artifacts("llama", "small", [32, 64, 128])
+    a = spec_from_artifacts(arts)
+    assert cache.stats()["misses"] == 1
+    b = spec_from_artifacts(list(reversed(arts)))    # order-insensitive
+    assert b is a
+    assert cache.stats()["hits"] == 1
+    assert a.ideal().n_gpus == 128
+    # Validates single-combo input.
+    with pytest.raises(ValueError):
+        spec_from_artifacts(arts
+                            + scaling_artifacts("gpt", "small", [32]))
+    # Derived specs drive real jobs.
+    job = Job(uid=9, tenant="t0", gpu_type=0, n_pods=16, gpus_per_pod=8,
+              duration=100.0, elastic=a)
+    assert job.work_rate == 1.0
