@@ -34,12 +34,19 @@ def bench_seed(default: int = 0) -> int:
     return int(os.environ.get("REPRO_BENCH_SEED", default))
 
 
+# Paths written by write_bench_json this process, in order.  The
+# orchestrator (benchmarks/run.py --json) snapshots the length before
+# each module run to attribute artifacts to the module that wrote them.
+RECORDED: List[str] = []
+
+
 def write_bench_json(name: str, payload: Dict) -> str:
     """Drop a ``BENCH_<name>.json`` summary next to the CWD; CI uploads
     these as workflow artifacts so the perf trajectory is kept per-PR."""
     path = os.path.abspath(f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True, default=float)
+    RECORDED.append(path)
     print(f"    [json] {path}")
     return path
 

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import copy
+import math
 import os
 import sys
 from typing import Dict, List, Optional, Sequence
@@ -186,6 +187,10 @@ def elastic_gate(seed: int, smoke: bool) -> Dict:
                _censored_jobs(rigid, horizon), 90.0),
            "elastic": waiting_percentile(
                _censored_jobs(elast, horizon), 90.0)}
+    # NaN = "no started jobs" (no data) — the scenario must produce
+    # waits on both sides before the tail-latency gate means anything.
+    assert not any(math.isnan(v) for v in p90.values()), \
+        f"no waiting-time data: {p90}"
     overhead_frac = elast.metrics.reshape_overhead_fraction()
     reshapes = elast.metrics.reshapes
     shrunk_starts = sum(

@@ -27,6 +27,7 @@ Writes ``BENCH_federation.json`` (uploaded as a CI artifact).
 from __future__ import annotations
 
 import argparse
+import math
 import os
 import sys
 import time
@@ -212,6 +213,11 @@ def spillover_gate(seed: int, smoke: bool) -> Dict:
     print(f"    {spill.spills} spills, "
           f"{spill.routing.cross_region_forwards} cross-region forwards")
     assert spill.spills > 0, "scenario must actually exercise spillover"
+    # waiting_percentile returns NaN on "no started jobs" — that is
+    # missing data, not a 0 s tail; the gate requires real waits.
+    assert not any(math.isnan(stats[tag]["p90_jwtd_s"])
+                   for tag in ("static", "spillover")), \
+        "no waiting-time data in the spillover scenario"
     assert stats["spillover"]["p90_jwtd_s"] \
         < stats["static"]["p90_jwtd_s"], \
         "spillover must beat static partitioning on P90 JWTD"

@@ -14,6 +14,8 @@ matches against)."""
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import os
 import sys
 import time
@@ -38,9 +40,21 @@ MODULES = [
     ("federation bench", "benchmarks.federation_bench"),
     ("serving fabric bench", "benchmarks.serving_bench"),
     ("elastic training bench", "benchmarks.elastic_bench"),
+    ("observability bench", "benchmarks.obs_bench"),
     ("kernel  node-score bench", "benchmarks.kernel_bench"),
     ("§Roofline table", "benchmarks.roofline"),
 ]
+
+
+def _sanitize(obj):
+    """NaN/Inf -> None so the gate summary is strict-JSON parseable."""
+    if isinstance(obj, dict):
+        return {k: _sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_sanitize(v) for v in obj]
+    if isinstance(obj, float) and not math.isfinite(obj):
+        return None
+    return obj
 
 
 def main(argv=None) -> int:
@@ -53,6 +67,9 @@ def main(argv=None) -> int:
                     help="only run modules whose name contains this")
     ap.add_argument("--list", action="store_true",
                     help="print registered benchmark names and exit")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write a machine-readable per-module gate "
+                         "summary (ok/seconds/error/artifacts) to PATH")
     args = ap.parse_args(argv)
     if args.list:
         for title, modname in MODULES:
@@ -71,18 +88,38 @@ def main(argv=None) -> int:
         print(f"--only {args.only!r} matches no benchmark module; "
               f"available: {[m for _, m in MODULES]}")
         return 2
+    from benchmarks import common
+    records = []
     for title, modname in selected:
         print(f"\n================ {title} ({modname})")
         t0 = time.time()
+        n_artifacts = len(common.RECORDED)
+        rec = {"module": modname, "title": title, "ok": True,
+               "seconds": 0.0, "error": None, "artifacts": []}
         try:
             mod = importlib.import_module(modname)
             mod.main()
             print(f"[ok] {title} ({time.time() - t0:.1f}s)")
         except Exception as e:   # noqa: BLE001 — report all, fail at end
             failures.append(title)
+            rec["ok"] = False
+            rec["error"] = f"{type(e).__name__}: {e}"
             print(f"[FAIL] {title}: {e}")
             traceback.print_exc()
+        rec["seconds"] = round(time.time() - t0, 3)
+        rec["artifacts"] = list(common.RECORDED[n_artifacts:])
+        records.append(rec)
     print("\n================ summary")
+    if args.json:
+        payload = _sanitize({
+            "seed": args.seed,
+            "passed": len(selected) - len(failures),
+            "failed": len(failures),
+            "modules": records,
+        })
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"[json] gate summary -> {os.path.abspath(args.json)}")
     if failures:
         print(f"{len(failures)} benchmark(s) failed: {failures}")
         return 1

@@ -51,6 +51,12 @@ class ClusterState:
     # Nodes whose rows changed since the dirty set was last drained
     # (consumed by the incremental snapshot, §3.4.3).
     dirty_nodes: Set[int] = dataclasses.field(default_factory=set)
+    # True when a *delta-invariant* field (health, drain, type, zone)
+    # changed since the last snapshot take.  Placement churn only flips
+    # busy bits, so while this stays False the incremental snapshotter
+    # keeps its cached §3.4.1 pool masks / derived arrays and skips the
+    # invariant-row copies entirely.
+    invariants_dirty: bool = False
 
     def __post_init__(self) -> None:
         if self.node_draining is None:
@@ -199,10 +205,12 @@ class ClusterState:
 
     def set_gpu_health(self, node: int, gpu: int, healthy: bool) -> None:
         self.gpu_healthy[node, gpu] = healthy
+        self.invariants_dirty = True
         self._touch([node])
 
     def set_node_health(self, node: int, healthy: bool) -> None:
         self.node_healthy[node] = healthy
+        self.invariants_dirty = True
         self._touch([node])
 
     def set_drain(self, nodes: Iterable[int], draining: bool) -> None:
@@ -210,6 +218,7 @@ class ClusterState:
         draining nodes accept no new placements but keep running work."""
         nodes = [int(n) for n in nodes]
         self.node_draining[nodes] = draining
+        self.invariants_dirty = True
         self._touch(nodes)
 
     # ------------------------------------------------------------------

@@ -69,6 +69,9 @@ class DynamicsSummary:
     replicas_started: int = 0
     replicas_retired: int = 0
 
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
 
 class ClusterDynamics:
     def __init__(self, config: DynamicsConfig) -> None:

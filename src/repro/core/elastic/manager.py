@@ -28,7 +28,7 @@ is a no-op and the scheduler is byte-identical to the rigid path
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from ..dynamics.recovery import CheckpointModel
 from ..framework.api import CycleContext, ElasticPolicyPlugin
@@ -70,6 +70,10 @@ class ElasticManager:
     # ------------------------------------------------------------------
     def bind_metrics(self, metrics) -> None:
         self.metrics = metrics
+
+    def stats(self) -> Dict[str, int]:
+        """Counters for the telemetry registry's pull collector."""
+        return {"reshapes": self.reshapes}
 
     def adopt_recovery(self, model: CheckpointModel) -> None:
         """Share the dynamics engine's checkpoint model unless the

@@ -73,6 +73,10 @@ class EventBus:
         self._seq = itertools.count()
         self._handlers: Dict[EventKind, List[Handler]] = {}
         self._pending: Dict[EventKind, int] = {}
+        # Optional read-only telemetry tap (repro.obs): called with each
+        # event BEFORE its handlers, so observers see the pre-handler
+        # world.  Must not push events or mutate state.
+        self.tap: Optional[Handler] = None
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -103,5 +107,7 @@ class EventBus:
         return self._pending.get(kind, 0)
 
     def dispatch(self, event: Event) -> None:
+        if self.tap is not None:
+            self.tap(event)
         for handler in self._handlers.get(event.kind, ()):
             handler(event)

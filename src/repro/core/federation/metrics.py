@@ -169,3 +169,21 @@ class FederatedMetrics:
             out["jwtd_mean"] = summarize_waits(jobs)
             out["jwtd_p90_s"] = waiting_percentile(jobs, 90.0)
         return out
+
+    def publish(self, registry) -> None:
+        """Push the federation aggregates into a telemetry registry
+        (duck-typed — this module never imports :mod:`repro.obs`):
+        global gauges plus per-member SOR labeled ``member=...``."""
+        registry.gauge("federation_median_gar",
+                       "global median GAR").set(self.median_gar())
+        registry.gauge("federation_sor",
+                       "global SOR").set(self.sor())
+        registry.gauge("federation_mean_gfr",
+                       "capacity-weighted mean GFR").set(self.mean_gfr())
+        registry.gauge("federation_balance_index",
+                       "Jain fairness over member SOR").set(
+            self.balance_index())
+        sor_gauge = registry.gauge("federation_member_sor",
+                                   "per-member SOR")
+        for name, r in zip(self.names, self.recorders):
+            sor_gauge.set(r.sor(), member=name)

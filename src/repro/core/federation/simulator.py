@@ -90,6 +90,22 @@ class FederatedSimulator:
             sim.external_work = self._federation_work_outstanding
 
     # ------------------------------------------------------------------
+    def attach_telemetry(self, tel) -> None:
+        """Attach one :class:`repro.obs.Telemetry` across every member,
+        scoped by member name: registry series get ``member=...``
+        labels, each member runs its own scheduler trace lane, and
+        decisions carry the member they were made on.  The lockstep
+        loop dispatches one member event at a time, so the shared
+        facade's per-scope cycle accumulators never interleave."""
+        for m, sim in zip(self.fed.members, self.sims):
+            tel.attach(sim, scope=m.name)
+        if tel.registry is not None:
+            metrics = FederatedMetrics(
+                names=[m.name for m in self.fed.members],
+                recorders=[sim.metrics for sim in self.sims])
+            tel.registry.add_collector(lambda reg: metrics.publish(reg))
+
+    # ------------------------------------------------------------------
     def _federation_work_outstanding(self) -> bool:
         """Unrouted arrivals or quota-held jobs keep member TICK/SAMPLE
         chains alive, exactly like pre-pushed SUBMITs do standalone."""

@@ -20,11 +20,12 @@ See ``docs/plugins.md`` for the extension-point contract and a worked
 
 from .api import (AdmitPlugin, ClusterSelectPlugin, CycleContext,
                   CycleResult, DynamicsPlugin, ElasticPolicyPlugin,
-                  FilterPlugin, PermitPlugin, PlacementPass, Plugin,
-                  PostBindPlugin, PreemptPlugin, ProfileSet,
-                  QueuePolicyPlugin, QueueSortPlugin, ReservePlugin,
-                  RouterPolicyPlugin, SchedulingContext, SchedulingProfile,
-                  ScorePlugin, single_pass_plan)
+                  FilterPlugin, ObserverPlugin, PermitPlugin,
+                  PlacementPass, Plugin, PostBindPlugin, PreemptPlugin,
+                  ProfileSet, QueuePolicyPlugin, QueueSortPlugin,
+                  ReservePlugin, RouterPolicyPlugin, SchedulingContext,
+                  SchedulingProfile, ScorePlugin, obs_phase,
+                  single_pass_plan)
 from .builtin import (BackfillHeadTimeout, BackfillPolicy,
                       BestEffortFIFOPolicy, BinpackScore, ColocateBonus,
                       DefaultQueueSort, DynamicFeasibility, GpuTypeFilter,
@@ -43,9 +44,9 @@ __all__ = [
     "ScorePlugin", "ReservePlugin", "PermitPlugin", "PostBindPlugin",
     "PreemptPlugin", "QueuePolicyPlugin", "DynamicsPlugin",
     "ClusterSelectPlugin", "RouterPolicyPlugin", "ElasticPolicyPlugin",
-    "PlacementPass",
+    "ObserverPlugin", "PlacementPass",
     "SchedulingProfile", "ProfileSet", "SchedulingContext", "CycleContext",
-    "CycleResult", "single_pass_plan",
+    "CycleResult", "single_pass_plan", "obs_phase",
     # registry
     "register", "create_plugin", "available_plugins",
     # builtin

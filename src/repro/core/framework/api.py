@@ -33,6 +33,10 @@ ElasticPolicy   scheduler × parallelism co-design (repro.core.elastic):
                 which declared parallelism plan an elastic training job
                 runs at — shrink into fragmented capacity at placement,
                 grow back at a checkpoint boundary
+Observer        telemetry taps (repro.obs): cycle spans, placement /
+                rejection decisions with filter+score attribution,
+                preemption rationale, and every simulator bus event —
+                strictly read-only, fed by the Telemetry facade
 ==============  ======================================================
 
 **Score plugin contract** — every Score plugin declares whether its term
@@ -54,6 +58,7 @@ job placed earlier in the same gang) or *pod-dependent*:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import (TYPE_CHECKING, Callable, ClassVar, List, Mapping,
                     Optional, Sequence, Tuple)
@@ -389,6 +394,84 @@ class RouterPolicyPlugin(Plugin):
 
     def observe(self, outcome) -> None:  # pragma: no cover - hook
         pass
+
+
+class ObserverPlugin(Plugin):
+    """Telemetry extension point (:mod:`repro.obs`): read-only taps on
+    the scheduling pipeline, fed by an attached
+    :class:`~repro.obs.telemetry.Telemetry` facade.
+
+    Where every other extension point *decides* something, an observer
+    only *watches*: hooks must never mutate jobs, snapshots or cluster
+    state — the detached-telemetry byte-identity gate
+    (``benchmarks/obs_bench.py``) also runs with telemetry attached and
+    asserts placements and metrics are unchanged.
+
+    Hooks (all optional; default implementations are no-ops):
+
+    * :meth:`on_cycle` — after every QSCH cycle (the Tick tap), with a
+      :class:`~repro.obs.telemetry.CycleSpan` carrying wall-clock phase
+      timings and the :class:`CycleResult`;
+    * :meth:`on_bind` / :meth:`on_reject` — after a placement binds
+      (the PostBind tap) or an attempt fails, with a
+      :class:`~repro.obs.audit.PlacementDecision` carrying per-Filter
+      node-elimination counts and the per-ScorePlugin score breakdown
+      of the winning nodes (``None`` when the audit pillar is off);
+    * :meth:`on_preempt` — one eviction fired (the Preempt tap), with a
+      :class:`~repro.obs.audit.PreemptionRecord` naming victim,
+      beneficiary and the Preempt plugin that selected it;
+    * :meth:`on_event` — every simulator :class:`~repro.core.events.Event`
+      (the EventBus subscriber: SUBMIT/END plus all dynamics kinds);
+    * :meth:`on_sample` — every metrics :class:`~repro.core.metrics.Sample`;
+    * :meth:`on_job` — job lifecycle edges (``"placed"`` /
+      ``"finished"`` / ``"interrupted"`` / ``"reshape"``);
+    * :meth:`on_run_end` — the simulator finalized.
+
+    ``scope`` is ``None`` standalone and the member name under a
+    federation (one Telemetry can watch every member simulator).
+    """
+
+    def on_cycle(self, span, ctx: "CycleContext") -> None:
+        pass
+
+    def on_bind(self, job: Job, decision, ctx: "CycleContext") -> None:
+        pass
+
+    def on_reject(self, job: Job, decision, ctx: "CycleContext") -> None:
+        pass
+
+    def on_preempt(self, record, ctx: "CycleContext") -> None:
+        pass
+
+    def on_event(self, event, scope: Optional[str] = None) -> None:
+        pass
+
+    def on_sample(self, sample, scope: Optional[str] = None) -> None:
+        pass
+
+    def on_job(self, job: Job, edge: str, t: float,
+               scope: Optional[str] = None) -> None:
+        pass
+
+    def on_run_end(self, sim, scope: Optional[str] = None) -> None:
+        pass
+
+
+#: Shared no-op context for detached-telemetry phase sites (one object,
+#: never re-allocated: the detached hot path pays a single ``is None``
+#: branch plus a constant-cost ``with``).
+_NULL_PHASE = contextlib.nullcontext()
+
+
+def obs_phase(obs, name: str):
+    """Timed-phase context for an attached telemetry observer.
+
+    QSCH/RSCH wrap each pipeline stage (snapshot → queue-sort → filter
+    → score → reserve-permit → bind → preempt) in
+    ``with obs_phase(self.obs, "..."):``; with ``obs is None`` (no
+    telemetry attached) this returns a shared null context and the
+    stage runs untimed and unchanged."""
+    return _NULL_PHASE if obs is None else obs.phase(name)
 
 
 # ----------------------------------------------------------------------

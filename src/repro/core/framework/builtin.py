@@ -301,7 +301,13 @@ class BackfillPolicy(QueuePolicyPlugin):
             blocked_since = sched.head_blocked_since.setdefault(
                 head.uid, ctx.now)
             if ctx.now - blocked_since >= self.head_timeout:
-                self.preempt.execute(head, ctx)
+                # Stamp the eviction source so preempt_job's audit
+                # record names this plugin and its beneficiary.
+                sched._preempt_source = (self.preempt.name, head.uid)
+                try:
+                    self.preempt.execute(head, ctx)
+                finally:
+                    sched._preempt_source = None
                 if sched.try_place(head, ctx):
                     sched.head_blocked_since.pop(head.uid, None)
                 else:

@@ -49,9 +49,13 @@ from .topology import ClusterTopology
 def waiting_percentile(jobs: Sequence[Job], q: float) -> float:
     """P<q> of job waiting times (s) over started jobs — the headline
     tail-latency metric (P90 JWTD) shared by the federation and elastic
-    benchmarks."""
+    benchmarks.
+
+    With no started jobs there *is* no percentile: the result is NaN,
+    not 0.0 — a zero here read as "perfect tail latency" when it meant
+    "no data" (callers treat NaN as missing)."""
     waits = [j.waiting_time for j in jobs if j.waiting_time is not None]
-    return float(np.percentile(waits, q)) if waits else 0.0
+    return float(np.percentile(waits, q)) if waits else float("nan")
 
 
 @dataclasses.dataclass
@@ -81,6 +85,10 @@ class JTTEDEntry:
 class MetricsRecorder:
     def __init__(self, topology: ClusterTopology) -> None:
         self.topology = topology
+        # Optional telemetry facade (repro.obs) — observes every sample
+        # and job-lifecycle edge.  None keeps recording byte-identical
+        # to an untelemetered run.
+        self.obs = None
         self.samples: List[Sample] = []
         self.jtted: List[JTTEDEntry] = []
         self._finished: List[Job] = []
@@ -129,6 +137,8 @@ class MetricsRecorder:
                    queue_depth=queue_depth, train_allocated=train_alloc,
                    infer_allocated=infer_alloc)
         self.samples.append(s)
+        if self.obs is not None:
+            self.obs.on_sample(s)
         return s
 
     def on_job_placed(self, job: Job, now: Optional[float] = None) -> None:
@@ -139,6 +149,8 @@ class MetricsRecorder:
             t = now if now is not None else job.start_time
             if t is not None:
                 self.mttr_samples.append(float(t) - t_int)
+        if self.obs is not None:
+            self.obs.on_job_placed(job, now)
         if job.placement is None or job.kind is not JobKind.TRAIN:
             return
         topo = self.topology
@@ -160,6 +172,8 @@ class MetricsRecorder:
         # count (== n_gpus for rigid jobs) so elastic and rigid runs
         # measure goodput in the same units.
         self.useful_gpu_seconds += job.original_duration * job.ideal_n_gpus
+        if self.obs is not None:
+            self.obs.on_job_finished(job)
 
     def on_job_interrupted(self, job: Job, t: float, lost_work: float,
                            overhead: float, reshape: bool = False) -> None:
@@ -180,6 +194,9 @@ class MetricsRecorder:
             self._interrupted_at[job.uid] = float(t)
         self.lost_gpu_seconds += max(0.0, lost_work) * job.n_gpus
         self.overhead_gpu_seconds += max(0.0, overhead) * job.n_gpus
+        if self.obs is not None:
+            self.obs.on_job_interrupted(job, t, lost_work, overhead,
+                                        reshape)
 
     # ------------------------------------------------------------------
     # Aggregates

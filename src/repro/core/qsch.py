@@ -37,7 +37,7 @@ import enum
 from typing import Dict, List, Optional
 
 from .cluster import ClusterState
-from .framework.api import CycleContext, CycleResult
+from .framework.api import CycleContext, CycleResult, obs_phase
 from .framework.builtin import (BackfillHeadTimeout, BackfillPolicy,
                                 BestEffortFIFOPolicy, StrictFIFOPolicy)
 from .job import Job, JobState
@@ -104,6 +104,12 @@ class QSCH:
         # The cycle's working snapshot, held only while ``cycle`` runs —
         # the target of mid-cycle health syncs (see ``sync_health``).
         self._working_snap = None
+        # Optional telemetry facade (repro.obs): cycle spans, placement
+        # decisions, preemption rationale.  None = zero-cost detached.
+        self.obs = None
+        # (plugin name, beneficiary uid) while a Preempt plugin's
+        # evictions run — preempt_job stamps it into the audit record.
+        self._preempt_source: Optional[tuple] = None
 
     # ------------------------------------------------------------------
     # Profiles
@@ -160,23 +166,28 @@ class QSCH:
     # One scheduling cycle
     # ------------------------------------------------------------------
     def cycle(self, state: ClusterState, now: float) -> CycleResult:
+        obs = self.obs
+        if obs is not None:
+            obs.cycle_begin(now)
         result = CycleResult()
-        snap = self.snapshotter.take(state)
+        with obs_phase(obs, "snapshot"):
+            snap = self.snapshotter.take(state)
         self._working_snap = snap
         result.snapshot_version = snap.version
         ctx = CycleContext(running=self.running, quota=self.quota,
                            sched=self, rsch=self.rsch, state=state,
                            snap=snap, now=now, result=result)
         try:
-            candidates = self.pending_jobs()
-            # Jobs failing static quota stay in the tenant queue and never
-            # enter the global pass (§3.2.2).
-            global_queue = []
-            for job in candidates:
-                if self.static_admit(job, ctx):
-                    global_queue.append(job)
-                else:
-                    result.admit_rejected += 1
+            with obs_phase(obs, "queue-sort"):
+                candidates = self.pending_jobs()
+                # Jobs failing static quota stay in the tenant queue and
+                # never enter the global pass (§3.2.2).
+                global_queue = []
+                for job in candidates:
+                    if self.static_admit(job, ctx):
+                        global_queue.append(job)
+                    else:
+                        result.admit_rejected += 1
             if global_queue:
                 self.queue_policy.run_cycle(global_queue, ctx)
 
@@ -185,15 +196,19 @@ class QSCH:
                 # provably unblocks it (priority, then quota reclamation).
                 if (self.config.priority_preemption and result.blocked_head
                         is not None):
-                    self._run_preempt_chain(result.blocked_head, ctx)
+                    with obs_phase(obs, "preempt"):
+                        self._run_preempt_chain(result.blocked_head, ctx)
             # Elastic grow pass: running shrunk gangs may reshape toward
             # their ideal plan at a checkpoint boundary — runs even with
             # an empty queue (freed capacity is what triggers growth).
             if self.elastic is not None:
-                self.elastic.grow_pass(ctx)
+                with obs_phase(obs, "elastic"):
+                    self.elastic.grow_pass(ctx)
             return result
         finally:
             self._working_snap = None
+            if obs is not None:
+                obs.cycle_end(result, ctx)
 
     def sync_health(self, state: ClusterState, nodes) -> None:
         """Mirror an external health/drain mutation onto the scheduler's
@@ -216,6 +231,7 @@ class QSCH:
     def try_place(self, job: Job, ctx: CycleContext,
                   backfilled: bool = False) -> bool:
         result = ctx.result
+        obs = self.obs
         # Elastic plan selection runs FIRST: admission, quota and
         # placement below all see the shape this attempt actually binds.
         if self.elastic is not None and job.elastic is not None:
@@ -224,9 +240,13 @@ class QSCH:
         # consumed it since the global-queue filter ran (§3.2.1).
         if not self.static_admit(job, ctx):
             result.admit_rejected += 1
+            if obs is not None:
+                obs.emit_reject(job, None, ctx, "static-admit")
             return False
         if not self.dynamic_admit(job, ctx):
             result.infeasible += 1
+            if obs is not None:
+                obs.emit_reject(job, None, ctx, "dynamic-admit")
             return False
         job.state = JobState.ADMITTED
         job.admit_time = ctx.now
@@ -237,43 +257,53 @@ class QSCH:
             self._remove_from_queue(job)
             self.requeue(job)
             result.requeues += 1
+            if obs is not None:
+                obs.emit_reject(job, sched, ctx,
+                                sched.reason or "no-placement")
             return False
         profile = self.profile_for(job)
         # Reserve/Permit (§3.3.2 transactional gang commit): every
         # successful Reserve is rolled back if a later plugin fails.
-        reserved = []
-        ok = True
-        for plugin in profile.reserve:
-            if plugin.reserve(job, sched.placement, ctx):
-                reserved.append(plugin)
-            else:
-                ok = False
-                break
-        if ok:
-            for plugin in profile.permit:
-                if not plugin.permit(job, sched.placement, ctx):
+        with obs_phase(obs, "reserve-permit"):
+            reserved = []
+            ok = True
+            for plugin in profile.reserve:
+                if plugin.reserve(job, sched.placement, ctx):
+                    reserved.append(plugin)
+                else:
                     ok = False
                     break
+            if ok:
+                for plugin in profile.permit:
+                    if not plugin.permit(job, sched.placement, ctx):
+                        ok = False
+                        break
+            if not ok:
+                for plugin in reversed(reserved):
+                    plugin.unreserve(job, sched.placement, ctx)
+                self._remove_from_queue(job)
+                self.requeue(job)
+                result.requeues += 1
         if not ok:
-            for plugin in reversed(reserved):
-                plugin.unreserve(job, sched.placement, ctx)
-            self._remove_from_queue(job)
-            self.requeue(job)
-            result.requeues += 1
+            if obs is not None:
+                obs.emit_reject(job, sched, ctx, "reserve-permit")
             return False
-        ctx.state.allocate(job, sched.placement)
-        # Mirror the commit onto the working snapshot (§3.4.3): later
-        # placements this cycle see it without re-taking the cluster.
-        ctx.snap.apply_placement(sched.placement)
-        job.placement = sched.placement
-        job.state = JobState.RUNNING
-        job.start_time = ctx.now
-        job.backfilled = backfilled
-        self._remove_from_queue(job)
-        self.running[job.uid] = job
-        result.scheduled.append(job)
-        for plugin in profile.post_bind:
-            plugin.post_bind(job, sched.placement, ctx)
+        with obs_phase(obs, "bind"):
+            ctx.state.allocate(job, sched.placement)
+            # Mirror the commit onto the working snapshot (§3.4.3): later
+            # placements this cycle see it without re-taking the cluster.
+            ctx.snap.apply_placement(sched.placement)
+            job.placement = sched.placement
+            job.state = JobState.RUNNING
+            job.start_time = ctx.now
+            job.backfilled = backfilled
+            self._remove_from_queue(job)
+            self.running[job.uid] = job
+            result.scheduled.append(job)
+            for plugin in profile.post_bind:
+                plugin.post_bind(job, sched.placement, ctx)
+        if obs is not None:
+            obs.emit_bind(job, sched, ctx)
         return True
 
     # -- lifecycle callbacks from the simulator --------------------------
@@ -316,6 +346,8 @@ class QSCH:
         ctx.result.preempted.append(job)
         self.requeue(job)
         ctx.result.requeues += 1
+        if self.obs is not None:
+            self.obs.emit_preempt(job, ctx, self._preempt_source)
 
     # -- conservative preemption engine (§3.2.3) --------------------------
     def structurally_placeable(self, job: Job, ctx: CycleContext) -> bool:
@@ -341,7 +373,11 @@ class QSCH:
             victims = plugin.victims(job, ctx)
             if victims:
                 break
-            plugin.execute(job, ctx)
+            self._preempt_source = (plugin.name, job.uid)
+            try:
+                plugin.execute(job, ctx)
+            finally:
+                self._preempt_source = None
             if job.state is JobState.RUNNING:
                 return
         if not victims:
@@ -352,12 +388,16 @@ class QSCH:
             return
         victims.sort(key=lambda j: (j.priority, -(j.start_time or 0.0)))
         budget = self.config.max_preemptions_per_cycle
-        for victim in victims:
-            if budget <= 0:
-                break
-            if self.dynamic_admit(job, ctx):
-                break
-            self.preempt_job(victim, ctx)
-            budget -= 1
+        self._preempt_source = (plugin.name, job.uid)
+        try:
+            for victim in victims:
+                if budget <= 0:
+                    break
+                if self.dynamic_admit(job, ctx):
+                    break
+                self.preempt_job(victim, ctx)
+                budget -= 1
+        finally:
+            self._preempt_source = None
         if self.dynamic_admit(job, ctx):
             self.try_place(job, ctx)

@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .framework.api import (PlacementPass, ProfileSet, SchedulingContext,
-                            SchedulingProfile, single_pass_plan)
+                            SchedulingProfile, obs_phase, single_pass_plan)
 from .framework.builtin import (GpuTypeFilter, HealthFilter, binpack_pass,
                                 ebinpack_pass, espread_plan, make_profile,
                                 spread_pass)
@@ -129,6 +129,9 @@ class ScheduleResult:
     placement: Optional[Placement]
     reason: str = ""
     groups_used: int = 0
+    # Raw decision-audit capture (repro.obs lifts it into typed records
+    # via build_decision); None when no telemetry observer is attached.
+    audit: Optional[Dict] = None
 
 
 class RSCH:
@@ -147,6 +150,9 @@ class RSCH:
         # Static per-NodeNetGroup spine membership (topology never changes).
         self._group_spine = topology.spine_id[np.searchsorted(
             topology.leaf_id, np.arange(topology.n_leaf_groups))]
+        # Optional telemetry facade (repro.obs): filter/score phase
+        # timing + decision-audit capture.  None = zero-cost detached.
+        self.obs = None
 
     # ------------------------------------------------------------------
     # Public API
@@ -191,11 +197,17 @@ class RSCH:
         via ``ClusterState.allocate`` by the caller.  ``ctx`` gives
         Score plugins optional cluster context (e.g. running jobs)."""
         profile = self.profile_for(job)
+        obs = self.obs
+        capture: Optional[Dict] = None
+        if obs is not None and obs.audit_on:
+            capture = {"profile": profile.name, "passes": []}
         result = ScheduleResult(None, "empty placement plan")
         for pass_ in profile.plan(job, snap):
-            result = self._run_pass(job, snap, pass_, profile, ctx)
+            result = self._run_pass(job, snap, pass_, profile, ctx,
+                                    capture)
             if result.placement is not None:
-                return result
+                break
+        result.audit = capture
         return result
 
     # ------------------------------------------------------------------
@@ -241,12 +253,29 @@ class RSCH:
 
     def _run_pass(self, job: Job, snap: Snapshot, pass_: PlacementPass,
                   profile: SchedulingProfile,
-                  ctx: Optional[SchedulingContext]) -> ScheduleResult:
+                  ctx: Optional[SchedulingContext],
+                  capture: Optional[Dict] = None) -> ScheduleResult:
         topo = self.topology
-        pool, default_pool = self._resolve_pool(job, snap, profile,
-                                                pass_.zone)
+        obs = self.obs
+        with obs_phase(obs, "filter"):
+            pool, default_pool = self._resolve_pool(job, snap, profile,
+                                                    pass_.zone)
+        pa: Optional[Dict] = None
+        if capture is not None:
+            pa = {"zone": pass_.zone, "reason": "",
+                  "filters": self._audit_filters(job, snap, profile,
+                                                 pass_.zone),
+                  "pool": int(np.count_nonzero(pool)), "breakdown": None,
+                  "colocate_per_pod": 0.0}
+            capture["passes"].append(pa)
+
+        def fail(reason: str) -> ScheduleResult:
+            if pa is not None:
+                pa["reason"] = reason
+            return ScheduleResult(None, reason)
+
         if not pool.any():
-            return ScheduleResult(None, "empty node pool")
+            return fail("empty node pool")
 
         # --- Level 1: NodeNetGroup preselection (§3.4.2) ---------------
         pod_slots = np.where(pool, snap.free_gpus // job.gpus_per_pod, 0)
@@ -255,7 +284,7 @@ class RSCH:
             job, snap, pool, pod_slots, pass_.enhanced, pass_.spread,
             group_term)
         if selected_groups is None:
-            return ScheduleResult(None, "no NodeNetGroup set satisfies job")
+            return fail("no NodeNetGroup set satisfies job")
         # One gather resolves both group membership and the per-node
         # anchor-group preference (rank table over groups -> node axis).
         group_pref = np.zeros(topo.n_leaf_groups, dtype=np.float32)
@@ -295,16 +324,26 @@ class RSCH:
         mask = pool & in_groups
         gload_nodes = group_load[topo.leaf_id]
         extra = self._extra_score_terms(job, snap, pool, pass_, ctx)
-        if self.config.batched_gang:
-            nodes = self._select_nodes_batched(
-                job, snap, mask, gload_nodes, topo_pref, weights, colocate,
-                np.where(in_groups, pod_slots, 0), extra)
-        else:
-            nodes = self._select_nodes_sequential(
-                job, snap, pool, in_groups, gload_nodes, topo_pref,
-                weights, colocate, extra)
+        score_out = {} if pa is not None else None
+        with obs_phase(obs, "score"):
+            if self.config.batched_gang:
+                nodes = self._select_nodes_batched(
+                    job, snap, mask, gload_nodes, topo_pref, weights,
+                    colocate, np.where(in_groups, pod_slots, 0), extra,
+                    score_out)
+            else:
+                nodes = self._select_nodes_sequential(
+                    job, snap, pool, in_groups, gload_nodes, topo_pref,
+                    weights, colocate, extra)
         if nodes is None:
-            return ScheduleResult(None, "gang placement failed")
+            return fail("gang placement failed")
+        if pa is not None:
+            pa["reason"] = "ok"
+            pa["colocate_per_pod"] = float(colocate)
+            if score_out and "scores" in score_out:
+                pa["breakdown"] = self._audit_breakdown(
+                    job, snap, pass_, pool, gload_nodes, topo_pref,
+                    score_out["scores"], nodes, ctx)
 
         # --- Fine-grained device selection per chosen slot (§3.3.1) ----
         # One vectorized gather extracts the availability rows of the
@@ -319,7 +358,7 @@ class RSCH:
             avail = avail_map[node]
             gpus = self._pick_from_avail(avail, job.gpus_per_pod)
             if gpus is None:
-                return ScheduleResult(None, "device-level selection failed")
+                return fail("device-level selection failed")
             for g in gpus:
                 avail[g] = False
             pods.append(PodPlacement(node=node, gpu_indices=gpus,
@@ -361,6 +400,93 @@ class RSCH:
         return total
 
     # ------------------------------------------------------------------
+    # Decision-audit capture (repro.obs; only runs with an observer on)
+    # ------------------------------------------------------------------
+    def _audit_filters(self, job: Job, snap: Snapshot,
+                       profile: SchedulingProfile, zone: Optional[str]
+                       ) -> List[tuple]:
+        """Replay the Filter chain sequentially, counting the nodes each
+        stage eliminates — `(plugin, before, after)` tuples, including
+        the structural stages (drain windows, the zone selector).
+
+        The default GpuTypeFilter+HealthFilter chain is job-independent
+        given ``(gpu_type, zone)``, so its replay is cached per cycle in
+        ``snap.derived`` (cleared on health mutations) — the audit then
+        costs one dict hit per placement attempt, not an O(n) rescan."""
+        filters = profile.filters
+        key = None
+        if all(type(f) in (GpuTypeFilter, HealthFilter) for f in filters):
+            key = ("obs_fstats", int(job.gpu_type), zone)
+            cached = snap.derived.get(key)
+            if cached is not None:
+                return cached
+        pool = ~snap.node_draining
+        after = int(np.count_nonzero(pool))
+        stats = [("drain", int(pool.size), after)]
+        for f in filters:
+            before = after
+            pool = pool & np.asarray(f.mask(job, snap, zone), dtype=bool)
+            after = int(np.count_nonzero(pool))
+            stats.append((f.name, before, after))
+        if zone == "zone":
+            pool = pool & snap.inference_zone
+            stats.append(("inference-zone", after,
+                          int(np.count_nonzero(pool))))
+        elif zone == "general":
+            pool = pool & ~snap.inference_zone
+            stats.append(("general-zone", after,
+                          int(np.count_nonzero(pool))))
+        if key is not None:
+            snap.derived[key] = stats
+        return stats
+
+    def _audit_breakdown(self, job: Job, snap: Snapshot,
+                         pass_: PlacementPass, pool: np.ndarray,
+                         gload_nodes: np.ndarray, topo_pref: np.ndarray,
+                         scores: np.ndarray, nodes: List[int],
+                         ctx: Optional[SchedulingContext]) -> Dict:
+        """Raw capture for the per-ScorePlugin decomposition of the
+        fused score at each distinct bound node.  Mirrors
+        :func:`node_scores_np`'s inputs term by term, so per node the
+        lifted terms sum to the captured fused score (float32 rounding
+        aside).  The audit layer does the term arithmetic and the
+        per-node pivot lazily, on first ``decision.passes`` read —
+        this function is on the bind hot path (≤5% attached-overhead
+        budget in ``benchmarks/obs_bench.py``)."""
+        idx = np.fromiter(dict.fromkeys(nodes), dtype=np.intp)
+        # Capture = gathers only.  Small per-node copies of the fused
+        # kernel's inputs (snapshot rows mutate after the bind; the
+        # full gload/topo/score arrays must not be pinned by the audit
+        # ring) plus the scorers' weight rows; the per-plugin term
+        # arithmetic happens lazily in the audit layer's lift.  Arrays
+        # stay ndarrays: one GC-tracked object per field instead of
+        # O(nodes) boxed floats, so a long attached run does not
+        # inflate collector scans.
+        weights: List[tuple] = []
+        extra: Dict[str, np.ndarray] = {}
+        for s in pass_.scorers:
+            w = s.fused_weights(job)
+            if w is not None:
+                weights.append((s.name, w.used, w.fit, w.group, w.topo))
+            if s.pod_dependent:
+                continue
+            term = s.score(job, snap, pool, ctx)
+            if term is not None:
+                prev = extra.get(s.name)
+                term = np.asarray(term)[idx]
+                extra[s.name] = term if prev is None else prev + term
+        return {"nodes": idx,
+                "used": snap.used_gpus[idx],
+                "free": snap.free_gpus[idx],
+                "gload": np.asarray(gload_nodes)[idx],
+                "tpref": np.asarray(topo_pref)[idx],
+                "totals": scores[idx],
+                "g": float(self.topology.gpus_per_node),
+                "request": float(job.gpus_per_pod),
+                "weights": weights,
+                "extra": extra}
+
+    # ------------------------------------------------------------------
     # Node selection: batched (one fused pass) vs sequential (per pod)
     # ------------------------------------------------------------------
     def _select_nodes_batched(self, job: Job, snap: Snapshot,
@@ -368,7 +494,8 @@ class RSCH:
                               topo_pref: np.ndarray, weights: ScoreWeights,
                               colocate: float,
                               slots: Optional[np.ndarray] = None,
-                              extra: Optional[np.ndarray] = None
+                              extra: Optional[np.ndarray] = None,
+                              score_out: Optional[Dict] = None
                               ) -> Optional[List[int]]:
         """Whole-gang placement from ONE filter+score pass (§3.4).
 
@@ -394,6 +521,10 @@ class RSCH:
             slots = np.asarray(sl).astype(np.int64)
         if extra is not None:
             scores = np.where(scores > NEG_INF, scores + extra, scores)
+        if score_out is not None:
+            # By reference — the audit breakdown reads a handful of
+            # entries; no copy on the scheduling path.
+            score_out["scores"] = scores
         return select_gang_slots(
             scores, snap.free_gpus, job.gpus_per_pod, job.n_pods,
             fit_weight=weights.fit, colocate_bonus=colocate, slots=slots)

@@ -98,6 +98,10 @@ class Simulator:
         # arrivals or in-flight forwards (None = standalone, unchanged).
         self.external_work: Optional[Callable[[], bool]] = None
         self._engine: Optional["ClusterDynamics"] = None
+        # Optional telemetry facade (repro.obs.Telemetry.attach sets it,
+        # together with qsch.obs / rsch.obs / metrics.obs / bus.tap).
+        # None = untelemetered, byte-identical output.
+        self.obs = None
         self._register_builtins()
 
     # ------------------------------------------------------------------
@@ -211,6 +215,8 @@ class Simulator:
                            requeues=self.requeues)
         if self._engine is not None:
             self._engine.finalize(result)
+        if self.obs is not None:
+            self.obs.finalize_run(self)
         return result
 
     def run(self, jobs: Sequence[Job]) -> SimResult:

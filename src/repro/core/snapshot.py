@@ -152,6 +152,7 @@ class FullSnapshotter:
     def take(self, state: ClusterState) -> Snapshot:
         self._version += 1
         state.dirty_nodes.clear()  # parity with the incremental path
+        state.invariants_dirty = False
         return Snapshot(
             free_gpus=state.free_gpus().copy(),
             used_gpus=state.used_gpus().copy(),
@@ -192,7 +193,7 @@ class IncrementalSnapshotter:
         dirty = sorted(state.dirty_nodes)
         if dirty:
             idx = np.asarray(dirty, dtype=np.int64)
-            # Row-level refresh of every mutable field.
+            # Busy-derived fields always refresh.
             usable = state.gpu_healthy[idx] & ~state.gpu_busy[idx]
             free = usable.sum(axis=1).astype(np.int32)
             snap.free_gpus[idx] = np.where(state.node_healthy[idx], free, 0)
@@ -200,16 +201,22 @@ class IncrementalSnapshotter:
                 state.gpu_busy[idx] & state.gpu_healthy[idx]
             ).sum(axis=1).astype(np.int32)
             snap.gpu_busy[idx] = state.gpu_busy[idx]
-            snap.gpu_healthy[idx] = state.gpu_healthy[idx]
-            snap.node_healthy[idx] = state.node_healthy[idx]
-            snap.gpu_type[idx] = state.gpu_type[idx]
-            snap.inference_zone[idx] = state.inference_zone[idx]
-            snap.node_draining[idx] = state.node_draining[idx]
-            # Refreshed rows may change health/type -> cached pool masks
-            # and derived arrays are stale.
-            snap.invalidate_caches()
+            # Delta-invariant fields (health, type, zone, drain) only
+            # changed if a setter raised ``state.invariants_dirty``;
+            # placement churn flips busy bits alone.  While the flag is
+            # down, the §3.4.1 pool masks + ``derived`` arrays stay
+            # valid and the invariant-row copies are skipped — saving
+            # two O(n) boolean passes per cycle on a busy cluster.
+            if state.invariants_dirty:
+                snap.gpu_healthy[idx] = state.gpu_healthy[idx]
+                snap.node_healthy[idx] = state.node_healthy[idx]
+                snap.gpu_type[idx] = state.gpu_type[idx]
+                snap.inference_zone[idx] = state.inference_zone[idx]
+                snap.node_draining[idx] = state.node_draining[idx]
+                snap.invalidate_caches()
             self.rows_copied += len(dirty)
         state.dirty_nodes.clear()
+        state.invariants_dirty = False
         snap.version = self._version
         return snap
 

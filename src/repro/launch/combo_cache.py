@@ -18,9 +18,31 @@ figure.
 
 from __future__ import annotations
 
+import weakref
 from typing import Any, Callable, Dict, Hashable, Optional, Tuple
 
-__all__ = ["ComboCache", "mesh_key"]
+__all__ = ["ComboCache", "cache_stats", "mesh_key"]
+
+# Every live ComboCache, for telemetry pull-collection (repro.obs wires
+# cache_stats() into its metric registry).  Weak references: a cache's
+# lifetime stays owned by its creator, not by the stats registry.
+_LIVE: "weakref.WeakSet[ComboCache]" = weakref.WeakSet()
+
+
+def cache_stats() -> Dict[str, Dict[str, int]]:
+    """Hit/miss/size stats of every live cache, keyed by cache name.
+
+    Same-named caches (e.g. a fresh one per benchmark phase) collapse
+    onto one key with summed counters."""
+    out: Dict[str, Dict[str, int]] = {}
+    for cache in list(_LIVE):
+        st = cache.stats()
+        agg = out.setdefault(st["name"], {"hits": 0, "misses": 0,
+                                          "size": 0})
+        agg["hits"] += st["hits"]
+        agg["misses"] += st["misses"]
+        agg["size"] += st["size"]
+    return out
 
 
 def mesh_key(mesh) -> Tuple[Tuple[str, int], ...]:
@@ -44,6 +66,7 @@ class ComboCache:
         self.hits = 0
         self.misses = 0
         self._data: Dict[Hashable, Any] = {}
+        _LIVE.add(self)
 
     def __len__(self) -> int:
         return len(self._data)

@@ -110,6 +110,17 @@ class ServeEngine:
         self.evictions = 0
 
     # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Engine counters for telemetry pull-collection."""
+        return {"steps": self.steps,
+                "prefill_calls": self.prefill_calls,
+                "prefill_tokens": self.prefill_tokens,
+                "evictions": self.evictions,
+                "queued": len(self.queue),
+                "resident": sum(1 for s in self.slots
+                                if s is not None and not s.done)}
+
+    # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         if req.submitted_step is None:
             req.submitted_step = self.steps

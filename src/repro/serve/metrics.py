@@ -119,3 +119,13 @@ class ServingMetrics:
             "p90_ttft_s": self.p90_ttft_s(),
             "mean_tpot_s": self.mean_tpot_s(),
         }
+
+    def publish(self, registry, pool: str = "pool") -> None:
+        """Push the headline numbers into a telemetry
+        :class:`~repro.obs.registry.MetricRegistry` (gauges labeled by
+        pool name).  Duck-typed on the registry — this module never
+        imports :mod:`repro.obs`."""
+        for key, value in self.report().items():
+            registry.gauge("serving_" + key,
+                           "serving fabric headline metric").set(
+                value, pool=pool)

@@ -191,6 +191,28 @@ class ReplicaPool:
             self.route(req)
         return self.metrics
 
+    # -- telemetry ------------------------------------------------------
+    def bind_registry(self, registry, name: str = "pool") -> None:
+        """Register a pull collector on a telemetry registry: on every
+        ``collect()`` the pool publishes its headline serving metrics
+        plus the observed-load signal (requests routed, Little's-law
+        replica demand at the latest bucket)."""
+
+        def collect(reg) -> None:
+            self.metrics.publish(reg, pool=name)
+            last_bucket = max(self._arrivals) if self._arrivals else 0
+            t = last_bucket * self.demand_bucket_s
+            reg.gauge("serving_observed_rps",
+                      "observed arrival rate, latest bucket").set(
+                self.observed_rps(t), pool=name)
+            reg.gauge("serving_replica_demand",
+                      "Little's-law replicas needed, latest bucket").set(
+                self.replica_demand(t), pool=name)
+            reg.gauge("serving_replicas", "replicas in the pool").set(
+                len(self.replicas), pool=name)
+
+        registry.add_collector(collect)
+
     # -- demand export --------------------------------------------------
     def observed_rps(self, t: float) -> float:
         """Observed arrival rate (requests/s) in the bucket holding

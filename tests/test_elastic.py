@@ -3,6 +3,8 @@ checkpoint recovery (including restarts at a different GPU count),
 shrink-into-fragments placement, checkpoint-boundary grow, byte-identity
 of the rigid path, and the combo-cache memoization."""
 
+import math
+
 import pytest
 
 from repro.core import (CheckpointModel, ClusterState, DynamicsConfig,
@@ -328,7 +330,9 @@ def test_waiting_percentile_promoted_and_reexported():
     for i, j in enumerate(jobs[:3]):
         j.start_time = j.submit_time + 100.0 * i    # waits 0/100/200
     assert waiting_percentile(jobs, 50.0) == pytest.approx(100.0)
-    assert waiting_percentile([], 90.0) == 0.0
+    # No started jobs -> no percentile: NaN ("no data"), not a fake
+    # perfect 0.0 tail latency.
+    assert math.isnan(waiting_percentile([], 90.0))
 
 
 # ----------------------------------------------------------------------
