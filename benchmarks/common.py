@@ -98,7 +98,7 @@ def clone_jobs(jobs: Sequence[Job]) -> List[Job]:
                 gang=j.gang, priority=j.priority,
                 submit_time=j.submit_time, duration=j.duration,
                 preemptible=j.preemptible, region=j.region,
-                elastic=j.elastic)
+                elastic=j.elastic, metadata=j.metadata)
             for j in jobs]
 
 

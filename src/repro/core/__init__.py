@@ -1,5 +1,5 @@
 """Kant's core: cluster model, QSCH, RSCH, plugin framework, simulator,
-cluster dynamics, federation, elastic training."""
+cluster dynamics, federation, elastic training, self-tuning."""
 
 from .cluster import ClusterState
 from .dynamics import (CheckpointModel, ClusterDynamics, DrainWindow,
@@ -28,6 +28,10 @@ from .snapshot import (FullSnapshotter, IncrementalSnapshotter, Snapshot,
                        snapshots_equal)
 from .topology import ClusterTopology, small_topology, \
     training_cluster_topology
+from .tuning import (HillClimbController, NoOpController,
+                     ObjectiveWeights, ParamChange, ParamSpace,
+                     StarvationEscalator, TuningManager, TuningProfile,
+                     TuningWindow)
 from .workload import (DEFAULT_QUERY_CLASSES, QueryClass, ServeRequest,
                        backfill_training_trace, diurnal_demand,
                        inference_trace, request_trace, trace_stats,
@@ -61,4 +65,8 @@ __all__ = [
     # elastic training (full surface in repro.core.elastic)
     "ElasticSpec", "ParallelismPlan", "ElasticConfig", "ElasticManager",
     "GreedyElastic", "spec_from_artifacts", "scaling_artifacts",
+    # self-tuning (full surface in repro.core.tuning)
+    "TuningManager", "ParamSpace", "ParamChange", "TuningProfile",
+    "TuningWindow", "ObjectiveWeights", "HillClimbController",
+    "StarvationEscalator", "NoOpController",
 ]

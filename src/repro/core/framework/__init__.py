@@ -12,20 +12,20 @@ gang commit and preemption are all named extension points; a
 * :mod:`repro.core.framework.builtin`  — the paper's behaviors as plugins
   plus the default train/inference/best-effort profiles;
 * :mod:`repro.core.framework.contrib`  — beyond-paper example plugins
-  (GFR-aware fragmentation score, tenant soft-affinity).
+  (GFR-aware fragmentation score, tenant and semantic soft-affinity).
 
 See ``docs/plugins.md`` for the extension-point contract and a worked
 "write your own Score plugin" example.
 """
 
-from .api import (AdmitPlugin, ClusterSelectPlugin, CycleContext,
-                  CycleResult, DynamicsPlugin, ElasticPolicyPlugin,
-                  FilterPlugin, ObserverPlugin, PermitPlugin,
-                  PlacementPass, Plugin, PostBindPlugin, PreemptPlugin,
-                  ProfileSet, QueuePolicyPlugin, QueueSortPlugin,
-                  ReservePlugin, RouterPolicyPlugin, SchedulingContext,
-                  SchedulingProfile, ScorePlugin, obs_phase,
-                  single_pass_plan)
+from .api import (AdmitPlugin, ClusterSelectPlugin, ControllerPlugin,
+                  CycleContext, CycleResult, DynamicsPlugin,
+                  ElasticPolicyPlugin, FilterPlugin, ObserverPlugin,
+                  PermitPlugin, PlacementPass, Plugin, PostBindPlugin,
+                  PreemptPlugin, ProfileSet, QueuePolicyPlugin,
+                  QueueSortPlugin, ReservePlugin, RouterPolicyPlugin,
+                  SchedulingContext, SchedulingProfile, ScorePlugin,
+                  obs_phase, single_pass_plan)
 from .builtin import (BackfillHeadTimeout, BackfillPolicy,
                       BestEffortFIFOPolicy, BinpackScore, ColocateBonus,
                       DefaultQueueSort, DynamicFeasibility, GpuTypeFilter,
@@ -35,7 +35,8 @@ from .builtin import (BackfillHeadTimeout, BackfillPolicy,
                       WeightSetScore, binpack_pass, default_profiles,
                       ebinpack_pass, espread_plan, espread_zone_pass,
                       make_profile, spread_pass)
-from .contrib import GfrAwareScore, TenantSoftAffinity
+from .contrib import (GfrAwareScore, SemanticSoftAffinity,
+                      TenantSoftAffinity, token_similarity)
 from .registry import available_plugins, create_plugin, register
 
 __all__ = [
@@ -44,7 +45,7 @@ __all__ = [
     "ScorePlugin", "ReservePlugin", "PermitPlugin", "PostBindPlugin",
     "PreemptPlugin", "QueuePolicyPlugin", "DynamicsPlugin",
     "ClusterSelectPlugin", "RouterPolicyPlugin", "ElasticPolicyPlugin",
-    "ObserverPlugin", "PlacementPass",
+    "ObserverPlugin", "ControllerPlugin", "PlacementPass",
     "SchedulingProfile", "ProfileSet", "SchedulingContext", "CycleContext",
     "CycleResult", "single_pass_plan", "obs_phase",
     # registry
@@ -58,5 +59,6 @@ __all__ = [
     "binpack_pass", "spread_pass", "ebinpack_pass", "espread_zone_pass",
     "espread_plan", "make_profile", "default_profiles",
     # contrib
-    "GfrAwareScore", "TenantSoftAffinity",
+    "GfrAwareScore", "TenantSoftAffinity", "SemanticSoftAffinity",
+    "token_similarity",
 ]

@@ -37,6 +37,11 @@ Observer        telemetry taps (repro.obs): cycle spans, placement /
                 rejection decisions with filter+score attribution,
                 preemption rationale, and every simulator bus event —
                 strictly read-only, fed by the Telemetry facade
+Controller      online parameter control (repro.core.tuning): consumes
+                the Sample/Tick stream on a control-period cadence and
+                adjusts registered tunable handles (score weights,
+                preemption budgets, timeouts) through a bounded,
+                rate-limited ParamSpace — the metrics→parameters loop
 ==============  ======================================================
 
 **Score plugin contract** — every Score plugin declares whether its term
@@ -425,6 +430,8 @@ class ObserverPlugin(Plugin):
     * :meth:`on_sample` — every metrics :class:`~repro.core.metrics.Sample`;
     * :meth:`on_job` — job lifecycle edges (``"placed"`` /
       ``"finished"`` / ``"interrupted"`` / ``"reshape"``);
+    * :meth:`on_param_change` — a tuning controller moved a registered
+      handle (:class:`~repro.core.tuning.params.ParamChange`);
     * :meth:`on_run_end` — the simulator finalized.
 
     ``scope`` is ``None`` standalone and the member name under a
@@ -453,7 +460,67 @@ class ObserverPlugin(Plugin):
                scope: Optional[str] = None) -> None:
         pass
 
+    def on_param_change(self, change,
+                        scope: Optional[str] = None) -> None:
+        pass
+
     def on_run_end(self, sim, scope: Optional[str] = None) -> None:
+        pass
+
+
+class ControllerPlugin(Plugin):
+    """Online parameter-control extension point
+    (:mod:`repro.core.tuning`): closes the metrics→parameters loop.
+
+    Where an :class:`ObserverPlugin` only *watches*, a controller
+    *steers* — but only through the registered tunable handles of a
+    :class:`~repro.core.tuning.params.ParamSpace`, never by touching
+    scheduler state directly.  Every write goes through
+    ``ParamSpace.set``, which clamps to the handle's bounds, enforces
+    its per-step change-rate limit, publishes the new value as a Gauge
+    into the attached obs registry and emits a DecisionAudit/trace
+    instant — so a controller cannot push the system outside its
+    declared envelope and every change is attributable.
+
+    Controllers are registered like any plugin and attached via
+    :class:`~repro.core.tuning.manager.TuningManager`, which feeds them
+    the simulator's Tick/Sample stream:
+
+    * :meth:`bind` — once at attach time, after the ParamSpace is
+      populated; stash references, seed internal state.
+    * :meth:`on_tick` — every scheduler tick (between QSCH cycles, on
+      the simulator's TICK cadence).  Cheap bookkeeping only — this is
+      on the per-cycle path and is covered by the ≤5% attached-overhead
+      gate (``benchmarks/tuning_bench.py``).
+    * :meth:`control` — once per **control period**
+      (:attr:`control_period_s` of simulated time), with a
+      :class:`~repro.core.tuning.manager.TuningWindow` summarizing the
+      period's GFR/JWTD/GAR/SOR observations.  This is where parameter
+      moves happen.
+    * :meth:`warm_start` — seed from a
+      :class:`~repro.core.tuning.profile.TuningProfile` exported by a
+      previously tuned run/member (Sliwko-style transfer) instead of
+      starting cold.
+
+    A controller that never calls ``space.set`` must be byte-identical
+    to a detached run (placements, metric report, raw samples) — the
+    tuning twin of the obs parity gate, enforced by
+    ``benchmarks/tuning_bench.py`` and ``tests/test_tuning.py``.
+    """
+
+    #: Simulated seconds between :meth:`control` invocations.
+    control_period_s: ClassVar[float] = 1800.0
+
+    def bind(self, space, manager) -> None:
+        pass
+
+    def on_tick(self, now: float, sched: "QSCH", space) -> None:
+        pass
+
+    def control(self, window, space) -> None:
+        pass
+
+    def warm_start(self, profile, space) -> None:
         pass
 
 

@@ -12,6 +12,10 @@ and compared in ``benchmarks/plugin_bench.py``.
   anti-affinity in the spirit of "Cluster Workload Allocation: Semantic
   Soft Affinity": pull a tenant's pods toward NodeNetGroups it already
   occupies, optionally away from groups occupied by other tenants.
+* :class:`SemanticSoftAffinity` — the NLP-affinity generalization of
+  the same idea: group affinity graded by token-overlap similarity of
+  job *descriptions* (``Job.metadata``), so "llama70b sft ads" pulls
+  toward "llama70b dpo ads" even across tenants.
 """
 
 from __future__ import annotations
@@ -128,6 +132,97 @@ class TenantSoftAffinity(ScorePlugin):
             for node in j.placement.nodes:
                 target[int(topo.leaf_id[node])] = 1.0
         per_group = self.weight * own - self.anti_weight * other
+        self._cache = (key, per_group)
+        return per_group
+
+    def group_score(self, job: Job, snap: Snapshot, pool: np.ndarray,
+                    ctx: Optional[SchedulingContext]
+                    ) -> Optional[np.ndarray]:
+        return self._per_group(job, ctx)
+
+    def score(self, job: Job, snap: Snapshot, pool: np.ndarray,
+              ctx: Optional[SchedulingContext]) -> Optional[np.ndarray]:
+        per_group = self._per_group(job, ctx)
+        if per_group is None:
+            return None
+        return per_group[self.topology.leaf_id]
+
+
+def _tokens(job: Job) -> frozenset:
+    """Lower-cased token set of a job's description.  Jobs without
+    ``metadata`` fall back to the tenant name, so the plugin degrades
+    to tenant affinity on undescribed workloads."""
+    text = job.metadata if job.metadata else job.tenant
+    return frozenset(text.lower().split())
+
+
+def token_similarity(a: frozenset, b: frozenset) -> float:
+    """Jaccard similarity of two token sets (0.0 when either is empty)."""
+    if not a or not b:
+        return 0.0
+    return len(a & b) / len(a | b)
+
+
+@register
+class SemanticSoftAffinity(ScorePlugin):
+    """Semantic (NLP) soft affinity over NodeNetGroups.
+
+    Generalizes :class:`TenantSoftAffinity` from the binary
+    own-tenant/other-tenant split to a *graded* similarity: each
+    LeafGroup is scored by the maximum Jaccard token overlap between
+    the requesting job's description (:attr:`~repro.core.job.Job.
+    metadata`, falling back to the tenant name) and the descriptions of
+    the jobs already running there.  Workloads that talk about the same
+    model/dataset/framework consolidate into the same network groups —
+    across tenant boundaries — while unrelated work feels no pull.
+
+    ``anti_weight`` optionally pushes away from groups whose resident
+    similarity is *below* ``anti_threshold`` (soft isolation of
+    unrelated workloads).  Like its parent it is purely a Score plugin:
+    it biases preselection and ranking, never filters.
+    """
+
+    name = "SemanticSoftAffinity"
+
+    def __init__(self, topology: ClusterTopology, weight: float = 1.0,
+                 anti_weight: float = 0.0,
+                 anti_threshold: float = 0.1) -> None:
+        self.topology = topology
+        self.weight = weight
+        self.anti_weight = anti_weight
+        self.anti_threshold = anti_threshold
+
+    def _per_group(self, job: Job,
+                   ctx: Optional[SchedulingContext]
+                   ) -> Optional[np.ndarray]:
+        running = getattr(ctx, "running", None)
+        if not running:
+            return None
+        # Same exact-key memoization as TenantSoftAffinity: occupancy
+        # and similarities are fully determined by the running
+        # membership and the requesting job's token set.
+        tokens = _tokens(job)
+        key = (tokens, tuple(running.keys()))
+        cached = getattr(self, "_cache", None)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        topo = self.topology
+        best = np.zeros(topo.n_leaf_groups, dtype=np.float32)
+        occupied = np.zeros(topo.n_leaf_groups, dtype=bool)
+        for j in running.values():
+            if j.placement is None:
+                continue
+            sim = token_similarity(tokens, _tokens(j))
+            for node in j.placement.nodes:
+                g = int(topo.leaf_id[node])
+                occupied[g] = True
+                if sim > best[g]:
+                    best[g] = sim
+        per_group = self.weight * best
+        if self.anti_weight:
+            unrelated = occupied & (best < self.anti_threshold)
+            per_group = per_group - self.anti_weight * \
+                unrelated.astype(np.float32)
         self._cache = (key, per_group)
         return per_group
 

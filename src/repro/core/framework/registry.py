@@ -16,6 +16,7 @@ names (useful for config-driven profile construction)::
 
 from __future__ import annotations
 
+import difflib
 from typing import Callable, Dict, List, Type
 
 from .api import Plugin
@@ -35,12 +36,21 @@ def register(cls: Type[Plugin]) -> Type[Plugin]:
 
 
 def create_plugin(name: str, **params) -> Plugin:
-    """Instantiate a registered plugin by name."""
+    """Instantiate a registered plugin by name.
+
+    Unknown names raise :class:`KeyError` (kept for backward
+    compatibility) whose message lists the sorted registered names plus
+    the closest matches to the requested one — a typo like
+    ``"BinPackScore"`` points straight at ``"BinpackScore"``.
+    """
     try:
         factory = _REGISTRY[name]
     except KeyError:
-        raise KeyError(f"unknown plugin {name!r}; registered: "
-                       f"{available_plugins()}") from None
+        names = available_plugins()
+        close = difflib.get_close_matches(name, names, n=3, cutoff=0.6)
+        hint = f" (did you mean {close}?)" if close else ""
+        raise KeyError(f"unknown plugin {name!r}{hint}; "
+                       f"registered: {names}") from None
     return factory(**params)
 
 

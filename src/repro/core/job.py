@@ -101,6 +101,11 @@ class Job:
     # ideal plan; ``duration``/``original_duration`` are ideal-plan
     # seconds.
     elastic: Optional["ElasticSpec"] = None
+    # Free-form descriptive text (model/framework/dataset tags): the
+    # semantic soft-affinity contrib plugin scores token overlap over
+    # it.  None = no description; affinity falls back to the tenant
+    # name.  The scheduler core never reads it.
+    metadata: Optional[str] = None
 
     # Mutable scheduling bookkeeping -----------------------------------
     state: JobState = JobState.PENDING

@@ -227,8 +227,11 @@ class DecisionAudit(ObserverPlugin):
             maxlen=max_records)
         self.preemptions: Deque[PreemptionRecord] = collections.deque(
             maxlen=max_records)
+        # Tuning parameter moves (repro.core.tuning ParamChange records).
+        self.param_changes: Deque = collections.deque(maxlen=max_records)
         self._seen_decisions = 0
         self._seen_preemptions = 0
+        self._seen_param_changes = 0
 
     # -- ObserverPlugin hooks ------------------------------------------
     def on_bind(self, job, decision, ctx) -> None:
@@ -246,11 +249,16 @@ class DecisionAudit(ObserverPlugin):
             self._seen_preemptions += 1
             self.preemptions.append(record)
 
+    def on_param_change(self, change, scope=None) -> None:
+        self._seen_param_changes += 1
+        self.param_changes.append(change)
+
     # -- accessors -----------------------------------------------------
     @property
     def dropped(self) -> int:
         return ((self._seen_decisions - len(self.decisions))
-                + (self._seen_preemptions - len(self.preemptions)))
+                + (self._seen_preemptions - len(self.preemptions))
+                + (self._seen_param_changes - len(self.param_changes)))
 
     def bound(self) -> List[PlacementDecision]:
         return [d for d in self.decisions if d.outcome == "bound"]
@@ -271,6 +279,7 @@ class DecisionAudit(ObserverPlugin):
             "rejected": len(self.rejected()),
             "rejections_by_reason": self.rejections_by_reason(),
             "preemptions": self._seen_preemptions,
+            "param_changes": self._seen_param_changes,
             "dropped": self.dropped,
         }
 
@@ -279,4 +288,5 @@ class DecisionAudit(ObserverPlugin):
             "summary": self.summary(),
             "decisions": [d.as_dict() for d in self.decisions],
             "preemptions": [p.as_dict() for p in self.preemptions],
+            "param_changes": [c.as_dict() for c in self.param_changes],
         }

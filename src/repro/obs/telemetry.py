@@ -161,6 +161,9 @@ class _ScopedTelemetry:
         self._tel.on_job_interrupted(job, t, lost, overhead, reshape,
                                      scope=self._scope)
 
+    def on_param_change(self, change) -> None:
+        self._tel.on_param_change(change, scope=self._scope)
+
     def finalize_run(self, sim) -> None:
         self._tel.finalize_run(sim, scope=self._scope)
 
@@ -522,6 +525,34 @@ class Telemetry:
         for ob in self.observers:
             ob.on_job(job, "reshape" if reshape else "interrupted", t,
                       scope)
+
+    # -- tuning hooks (repro.core.tuning) ------------------------------
+    def on_param_change(self, change,
+                        scope: Optional[str] = None) -> None:
+        """A tuning controller moved a registered handle: publish the
+        new value as a Gauge, stamp a trace instant on the scheduler
+        lane, and feed the observer chain (DecisionAudit keeps the
+        ring-capped change log)."""
+        self._simclock = max(self._simclock, change.t)
+        if self.registry is not None:
+            lbl = self._labels(scope)
+            self.registry.gauge(
+                "kant_tuned_param",
+                "current value of a tuned scheduling parameter").set(
+                change.value, param=change.param, **lbl)
+            self.registry.counter(
+                "kant_param_changes_total",
+                "applied tuning parameter moves, by source").inc(
+                source=change.source or "unknown", **lbl)
+        if self.tracer is not None:
+            self.tracer.instant("param-change", change.t * 1e6,
+                                PID_CLUSTER, self._sched_tid(scope),
+                                args={"param": change.param,
+                                      "previous": change.previous,
+                                      "value": change.value,
+                                      "source": change.source})
+        for ob in self.observers:
+            ob.on_param_change(change, scope)
 
     # -- run lifecycle -------------------------------------------------
     def finalize_run(self, sim, scope: Optional[str] = None) -> None:

@@ -1,0 +1,431 @@
+"""Self-tuning subsystem (repro.core.tuning): ParamSpace clamping,
+controller parity (attached never-mutating controller byte-identical to
+a detached run), hill-climb revert-on-regression, starvation
+escalation, profile transfer/warm-start, obs integration of parameter
+changes, and the semantic soft-affinity contrib plugin."""
+
+import dataclasses
+import json
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterState, Job, JobKind, PRIO_HIGH,
+                        PRIO_NORMAL, Placement, PodPlacement,
+                        QueuePolicy, SimConfig, Simulator, Strategy,
+                        small_topology)
+from repro.core.framework import (SemanticSoftAffinity, available_plugins,
+                                  create_plugin, token_similarity)
+from repro.core.metrics import Sample
+from repro.core.rsch import RSCHConfig
+from repro.core.tuning import (HillClimbController, NoOpController,
+                               ObjectiveWeights, ParamSpace,
+                               StarvationEscalator, TuningManager,
+                               TuningProfile, TuningWindow,
+                               bind_profile_weights, frontier_objective)
+from repro.core.workload import training_trace
+from repro.obs import Telemetry
+
+from conftest import make_qsch
+
+
+def trace(n, seed):
+    """Placeable trace for the 16-node test topology: cap job size at
+    64 GPUs (structurally unplaceable jobs would pin the queue) and
+    keep durations short so runs drain quickly."""
+    return [j for j in training_trace(n, seed=seed,
+                                      arrival_rate_per_hour=400,
+                                      mean_duration_s=1200.0)
+            if j.n_gpus <= 64]
+
+
+def make_sim(topo, *, policy=QueuePolicy.BACKFILL,
+             strategy=Strategy.E_BINPACK, horizon=None):
+    state = ClusterState.create(topo)
+    qsch = make_qsch(topo, state, policy=policy,
+                     rsch_config=RSCHConfig(train_strategy=strategy))
+    return Simulator(state, qsch, SimConfig(horizon=horizon))
+
+
+def placement_fingerprint(jobs):
+    return [(j.uid, j.start_time, j.end_time,
+             tuple((p.node, p.gpu_indices) for p in j.placement.pods)
+             if j.placement else None)
+            for j in jobs]
+
+
+# ----------------------------------------------------------------------
+# ParamSpace contract
+# ----------------------------------------------------------------------
+def make_space(lo=0.0, hi=10.0, step=1.0, integer=False, init=5.0):
+    space = ParamSpace()
+    box = {"v": init}
+    space.register("p", lambda: box["v"],
+                   lambda v: box.__setitem__("v", v),
+                   lo=lo, hi=hi, max_step=step, integer=integer)
+    return space, box
+
+
+def test_set_clamps_to_bounds_and_rate_limit():
+    space, box = make_space()
+    # Rate limit: a jump to 10 moves at most max_step from 5.
+    assert space.set("p", 10.0) == 6.0
+    assert box["v"] == 6.0
+    # Bounds: forcing past hi clamps to hi, bypassing only the rate.
+    assert space.set("p", 99.0, force=True) == 10.0
+    assert space.set("p", -99.0, force=True) == 0.0
+    # Non-forced move at the lo edge walks one step up.
+    assert space.set("p", 5.0) == 1.0
+
+
+def test_integer_handles_round():
+    space, box = make_space(integer=True, step=4.0)
+    assert space.set("p", 7.4) == 7.0
+    assert box["v"] == 7.0
+
+
+def test_noop_write_records_nothing():
+    space, _ = make_space()
+    seen = []
+    space.on_change = seen.append
+    assert space.set("p", 5.0) == 5.0
+    assert space.changes == [] and seen == []
+    space.set("p", 5.5)
+    assert len(space.changes) == 1 and len(seen) == 1
+    ch = space.changes[0]
+    assert (ch.param, ch.previous, ch.value) == ("p", 5.0, 5.5)
+
+
+def test_apply_skips_unknown_and_forces():
+    space, box = make_space()
+    skipped = space.apply({"p": 9.0, "ghost": 1.0})
+    assert skipped == ["ghost"]
+    assert box["v"] == 9.0                  # force bypassed the rate limit
+    assert space.changes[0].source == "warm-start"
+
+
+def test_duplicate_registration_raises():
+    space, _ = make_space()
+    with pytest.raises(ValueError):
+        space.register("p", lambda: 0.0, lambda v: None,
+                       lo=0.0, hi=1.0, max_step=0.1)
+
+
+def test_bind_profile_weights_discovers_fused_terms(topo):
+    from repro.core.framework import default_profiles
+    space = ParamSpace()
+    names = bind_profile_weights(space, default_profiles(topo))
+    assert "train-e-binpack.BinpackScore.used" in names
+    assert "inference-e-spread.SpreadScore.used" in names
+    # Sign-preserving bounds: positive terms stay >= 0, negative <= 0.
+    pos = space.param("train-e-binpack.BinpackScore.used")
+    assert pos.lo == 0.0 and pos.hi > 0
+    neg = space.param("inference-e-spread.SpreadScore.used")
+    assert neg.hi == 0.0 and neg.lo < 0
+    # Handles are live: writing moves the plugin's fused weights.
+    space.set("train-e-binpack.BinpackScore.used", 1.25, force=True)
+    assert space.get("train-e-binpack.BinpackScore.used") == 1.25
+
+
+# ----------------------------------------------------------------------
+# Controller parity: attached-but-silent == detached
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("policy,strategy", [
+    (QueuePolicy.BACKFILL, Strategy.E_BINPACK),
+    (QueuePolicy.STRICT_FIFO, Strategy.BINPACK),
+    (QueuePolicy.BEST_EFFORT_FIFO, Strategy.E_SPREAD),
+])
+def test_noop_controller_byte_identity(topo, policy, strategy):
+    jobs = trace(40, seed=7)
+
+    def run(attach):
+        sim = make_sim(topo, policy=policy, strategy=strategy)
+        mgr = None
+        if attach:
+            mgr = TuningManager([NoOpController()])
+            mgr.attach(sim)
+        trace = [dataclasses.replace(j) for j in jobs]
+        res = sim.run(trace)
+        return res, mgr
+
+    res_a, _ = run(attach=False)
+    res_b, mgr = run(attach=True)
+    assert placement_fingerprint(res_a.jobs) == \
+        placement_fingerprint(res_b.jobs)
+    assert [dataclasses.asdict(s) for s in res_a.metrics.samples] == \
+        [dataclasses.asdict(s) for s in res_b.metrics.samples]
+    assert repr(res_a.metrics.report()) == repr(res_b.metrics.report())
+    # The controller really observed the run, it just never wrote.
+    assert mgr.controllers[0].ticks_seen == res_b.cycles
+    assert mgr.space.changes == []
+
+
+# ----------------------------------------------------------------------
+# Hill climb: hysteresis + revert-on-regression
+# ----------------------------------------------------------------------
+def window_scoring(value):
+    """A synthetic window whose frontier objective is exactly ``value``
+    (single sample: gar=value, everything else zeroed/absent)."""
+    w = TuningWindow(t0=0.0, t1=1800.0)
+    w.samples.append(Sample(t=0.0, gar=value, gfr=0.0, allocated=0,
+                            capacity=0, queue_depth=0))
+    return w
+
+
+def climb_fixture(seed=0):
+    space, box = make_space(lo=0.0, hi=10.0, step=1.0, init=5.0)
+    ctl = HillClimbController(objective=ObjectiveWeights(), seed=seed,
+                              epsilon=0.0, hysteresis=0.05)
+    mgr = TuningManager([ctl])
+    ctl.bind(space, mgr)
+    return ctl, space, box
+
+
+def test_hill_climb_reverts_on_regression():
+    ctl, space, box = climb_fixture()
+    ctl.control(window_scoring(0.6), space)      # baseline + first probe
+    assert ctl.baseline == pytest.approx(0.6)
+    assert ctl.moves == 1
+    probed = box["v"]
+    assert probed != 5.0
+    ctl.control(window_scoring(0.4), space)      # regression -> revert
+    assert ctl.reverts == 1 and ctl.accepts == 0
+    assert box["v"] == 5.0
+    assert ctl.baseline == pytest.approx(0.6)    # baseline unchanged
+    # The revert flowed through the space as a forced, sourced change.
+    assert space.changes[-1].source.endswith(":revert")
+
+
+def test_hill_climb_accepts_improvement_beyond_hysteresis():
+    ctl, space, box = climb_fixture()
+    ctl.control(window_scoring(0.6), space)
+    probed = box["v"]
+    ctl.control(window_scoring(0.9), space)      # clear improvement
+    assert ctl.accepts == 1 and ctl.reverts == 0
+    assert box["v"] == probed                    # move kept
+    assert ctl.baseline == pytest.approx(0.9)
+
+
+def test_hill_climb_hysteresis_blocks_noise():
+    ctl, space, box = climb_fixture()
+    ctl.control(window_scoring(0.6), space)
+    ctl.control(window_scoring(0.62), space)     # within hysteresis
+    assert ctl.reverts == 1
+    assert box["v"] == 5.0
+
+
+def test_warm_start_seeds_baseline():
+    ctl, space, _ = climb_fixture()
+    prof = TuningProfile(name="donor", params={"p": 8.0}, objective=0.7)
+    mgr = TuningManager([ctl])
+    mgr.space = space
+    space.on_change = mgr._emit_change
+    mgr.warm_start(prof)
+    assert space.get("p") == 8.0
+    assert ctl.baseline == pytest.approx(0.7)
+
+
+# ----------------------------------------------------------------------
+# Starvation escalator
+# ----------------------------------------------------------------------
+def test_escalator_boosts_and_caps(topo, state):
+    qsch = make_qsch(topo, state)
+    esc = StarvationEscalator(wait_threshold_s=3600.0, boost=30,
+                              escalation_period_s=1800.0)
+    space = ParamSpace()
+    esc.bind(space, TuningManager())
+    assert "escalator.wait_threshold_s" in space
+    jobs = [Job(uid=1, tenant="t0", gpu_type=0, n_pods=1, gpus_per_pod=8,
+                submit_time=0.0),
+            Job(uid=2, tenant="t0", gpu_type=0, n_pods=1, gpus_per_pod=8,
+                submit_time=5000.0)]
+    for j in jobs:
+        qsch.submit(j)
+    esc.on_tick(3599.0, qsch, space)
+    assert jobs[0].priority == PRIO_NORMAL       # not starving yet
+    esc.on_tick(3600.0, qsch, space)
+    assert jobs[0].priority == PRIO_NORMAL + 30
+    assert jobs[1].priority == PRIO_NORMAL       # waited nothing
+    esc.on_tick(4000.0, qsch, space)             # inside refractory period
+    assert jobs[0].priority == PRIO_NORMAL + 30
+    esc.on_tick(5400.0, qsch, space)             # second escalation: capped
+    assert jobs[0].priority == PRIO_HIGH
+    esc.on_tick(9000.0, qsch, space)             # at cap: left alone
+    assert jobs[0].priority == PRIO_HIGH
+    assert jobs[1].priority == PRIO_NORMAL + 30  # now starving too
+    assert esc.escalations == 3
+
+
+def test_escalator_threshold_is_tunable():
+    esc = StarvationEscalator(wait_threshold_s=3600.0)
+    space = ParamSpace()
+    esc.bind(space, TuningManager())
+    space.set("escalator.wait_threshold_s", 1200.0, force=True)
+    assert esc.wait_threshold_s == 1200.0
+
+
+# ----------------------------------------------------------------------
+# Profile serialization + transfer
+# ----------------------------------------------------------------------
+def test_profile_json_round_trip(tmp_path):
+    prof = TuningProfile(name="tuned-a", params={"x": 1.5, "y": -2.0},
+                         objective=0.42, meta={"scope": "dc-a"})
+    clone = TuningProfile.from_json(prof.to_json())
+    assert clone == prof
+    path = str(tmp_path / "prof.json")
+    prof.save(path)
+    assert TuningProfile.load(path) == prof
+    # The payload is plain JSON (transferable between processes).
+    assert json.loads(prof.to_json())["params"]["y"] == -2.0
+
+
+def test_manager_export_and_warm_start_round_trip(topo):
+    sim = make_sim(topo)
+    mgr = TuningManager([HillClimbController(seed=3)])
+    mgr.attach(sim)
+    sim.run(trace(30, seed=2))
+    prof = mgr.export_profile("donor")
+    assert prof.params.keys() == set(mgr.space.names())
+
+    sim2 = make_sim(topo)
+    mgr2 = TuningManager([HillClimbController(seed=4)])
+    mgr2.attach(sim2)
+    skipped = mgr2.warm_start(prof)
+    assert skipped == []
+    assert mgr2.space.snapshot() == prof.params
+
+
+# ----------------------------------------------------------------------
+# Obs integration: ParamChange -> gauge + audit + trace
+# ----------------------------------------------------------------------
+def test_param_change_reaches_registry_audit_and_trace(topo):
+    sim = make_sim(topo)
+    tel = Telemetry()
+    tel.attach(sim)
+    mgr = TuningManager()
+    mgr.attach(sim)
+    mgr.space.set("qsch.max_preemptions_per_cycle", 32.0, now=123.0,
+                  source="test", force=True)
+    g = tel.registry.get("kant_tuned_param")
+    assert g.value(param="qsch.max_preemptions_per_cycle") == 32.0
+    assert tel.audit.summary()["param_changes"] == 1
+    change = tel.audit.param_changes[0]
+    assert change.value == 32.0 and change.source == "test"
+    events = [e for e in tel.tracer.to_json()["traceEvents"]
+              if e.get("name") == "param-change"]
+    assert len(events) == 1
+    assert events[0]["args"]["param"] == "qsch.max_preemptions_per_cycle"
+    # Audit export carries the change log.
+    assert tel.audit.to_json()["param_changes"][0]["value"] == 32.0
+
+
+def test_scoped_param_change_labels_member(topo):
+    sim = make_sim(topo)
+    tel = Telemetry(tracing=False)
+    tel.attach(sim, scope="dc-a")
+    mgr = TuningManager()
+    mgr.attach(sim, scope="dc-a")
+    mgr.space.set("qsch.max_preemptions_per_cycle", 48.0, now=1.0,
+                  source="test")
+    g = tel.registry.get("kant_tuned_param")
+    assert g.value(param="qsch.max_preemptions_per_cycle",
+                   member="dc-a") == 48.0
+
+
+# ----------------------------------------------------------------------
+# Registry diagnostics + ControllerPlugin slot
+# ----------------------------------------------------------------------
+def test_create_plugin_unknown_name_suggests_and_lists():
+    with pytest.raises(KeyError) as exc:
+        create_plugin("BinPackScore")
+    msg = str(exc.value)
+    assert "BinpackScore" in msg            # close match surfaced
+    assert "registered:" in msg
+    with pytest.raises(KeyError) as exc:
+        create_plugin("HillClimbControler")
+    assert "HillClimbController" in str(exc.value)
+
+
+def test_controllers_are_registered_plugins():
+    for name in ("NoOpController", "HillClimbController",
+                 "StarvationEscalator"):
+        assert name in available_plugins()
+        assert create_plugin(name).name == name
+
+
+# ----------------------------------------------------------------------
+# Semantic soft-affinity contrib plugin
+# ----------------------------------------------------------------------
+def running_job(uid, node, topo, tenant="t0", metadata=None):
+    j = Job(uid=uid, tenant=tenant, gpu_type=0, n_pods=1, gpus_per_pod=8,
+            kind=JobKind.TRAIN, metadata=metadata)
+    j.placement = Placement(pods=[PodPlacement(node=node,
+                                               gpu_indices=(0, 1))])
+    return j
+
+
+def test_token_similarity():
+    a = frozenset({"llama70b", "sft", "ads"})
+    b = frozenset({"llama70b", "dpo", "ads"})
+    assert token_similarity(a, b) == pytest.approx(2 / 4)
+    assert token_similarity(a, frozenset()) == 0.0
+
+
+def test_semantic_affinity_pulls_toward_similar_groups(topo):
+    # topo: 16 nodes, 4 per leaf -> node 0 in group 0, node 12 in group 3.
+    plugin = SemanticSoftAffinity(topo, weight=2.0)
+    running = {
+        1: running_job(1, 0, topo, metadata="llama70b sft ads"),
+        2: running_job(2, 12, topo, metadata="resnet vision batch"),
+    }
+    ctx = types.SimpleNamespace(running=running)
+    job = Job(uid=9, tenant="t1", gpu_type=0, n_pods=1, gpus_per_pod=8,
+              metadata="llama70b dpo ads")
+    snap = None
+    per_group = plugin.group_score(job, snap, np.ones(16, bool), ctx)
+    assert per_group[0] == pytest.approx(2.0 * 0.5)   # 2/4 token overlap
+    assert per_group[3] == 0.0                        # unrelated
+    node_scores = plugin.score(job, snap, np.ones(16, bool), ctx)
+    assert node_scores[0] > node_scores[12]
+
+
+def test_semantic_affinity_tenant_fallback_and_anti(topo):
+    plugin = SemanticSoftAffinity(topo, weight=1.0, anti_weight=0.5,
+                                  anti_threshold=0.1)
+    running = {1: running_job(1, 0, topo, tenant="ads", metadata=None),
+               2: running_job(2, 12, topo, tenant="search",
+                              metadata=None)}
+    ctx = types.SimpleNamespace(running=running)
+    job = Job(uid=9, tenant="ads", gpu_type=0, n_pods=1, gpus_per_pod=8)
+    per_group = plugin.group_score(job, None, np.ones(16, bool), ctx)
+    assert per_group[0] == pytest.approx(1.0)    # same tenant token
+    assert per_group[3] == pytest.approx(-0.5)   # occupied, unrelated
+    # Empty cluster: the term vanishes instead of crashing.
+    assert plugin.group_score(job, None, np.ones(16, bool),
+                              types.SimpleNamespace(running={})) is None
+
+
+# ----------------------------------------------------------------------
+# End-to-end: manager windows the run and the climb stays bounded
+# ----------------------------------------------------------------------
+def test_manager_windows_and_bounded_climb(topo):
+    sim = make_sim(topo)
+    mgr = TuningManager([HillClimbController(seed=1),
+                         StarvationEscalator(wait_threshold_s=600.0)])
+    mgr.attach(sim)
+    sim.run(trace(60, seed=3))
+    assert mgr.periods == len(mgr.history) > 0
+    # Every applied change respected its handle's bounds.
+    for ch in mgr.space.changes:
+        p = mgr.space.param(ch.param)
+        assert p.lo <= ch.value <= p.hi
+    # The wait harvester saw every started (uid, start_time) pair.
+    started = {(j.uid, j.start_time) for j in sim.qsch.running.values()}
+    assert mgr._seen_starts >= started
+    assert len(mgr._seen_starts) > 0
+
+
+def test_frontier_objective_nan_safe():
+    w = TuningWindow(t0=0.0, t1=10.0)      # no samples, no waits
+    assert frontier_objective(w) == 0.0
