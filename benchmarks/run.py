@@ -45,7 +45,7 @@ MODULES = [
     ("Fig 15  GFR vs scale", "benchmarks.fig15_gfr_scale", None),
     ("§3.4.3  snapshot bench", "benchmarks.snapshot_bench", []),
     ("§3.4    sched scale bench", "benchmarks.sched_scale_bench",
-     ["--smoke"]),
+     ["--smoke", "--check-regression"]),
     ("framework plugin bench", "benchmarks.plugin_bench", []),
     ("dynamics bench", "benchmarks.dynamics_bench", ["--smoke"]),
     ("federation bench", "benchmarks.federation_bench", ["--smoke"]),

@@ -204,7 +204,7 @@ def summarize(members: Sequence[MemberCluster], t: float = 0.0,
         state = m.state
         node_free = state.free_gpus()
         node_cap = np.where(state.node_healthy,
-                            state.gpu_healthy.sum(axis=1), 0)
+                            state.healthy_counts(), 0)
         for tp in np.unique(state.gpu_type):
             c = col.get(int(tp))
             if c is None:

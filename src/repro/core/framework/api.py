@@ -272,6 +272,11 @@ class QueuePolicyPlugin(Plugin):
     """The cycle body (Table 1): walks the admitted global queue and
     drives placements via ``ctx.sched.try_place``."""
 
+    # True when a blocked head ends the cycle with no further placement
+    # attempts (Strict FIFO).  The cycle pipeline consults this to
+    # predict which job — if any — opens the next cycle's RSCH call.
+    strict_head = False
+
     def run_cycle(self, queue: List[Job], ctx: CycleContext) -> None:
         raise NotImplementedError
 

@@ -258,6 +258,7 @@ class StrictFIFOPolicy(QueuePolicyPlugin):
     """Strict FIFO: one blocked head blocks everyone."""
 
     name = "StrictFIFO"
+    strict_head = True
 
     def run_cycle(self, queue: List[Job], ctx: CycleContext) -> None:
         for job in queue:

@@ -95,6 +95,10 @@ class QSCH:
         self.elastic = elastic
         self.snapshotter = (IncrementalSnapshotter()
                             if incremental_snapshots else FullSnapshotter())
+        # Optional cycle pipeline (repro.core.pipeline): speculative
+        # snapshot+score of the next cycle's head job.  None = classic
+        # strictly-sequential cycles (byte-identical default).
+        self.pipeline = None
         # Tenant queues (§3.2.2): submission order is kept per tenant; the
         # global pass merges by the QueueSort plugin's key.
         self.queues: Dict[str, List[Job]] = {}
@@ -116,6 +120,18 @@ class QSCH:
     # ------------------------------------------------------------------
     def profile_for(self, job: Job):
         return self.rsch.profiles.for_job(job)
+
+    def enable_pipeline(self):
+        """Turn on optimistic cycle pipelining (§3.4 latency hiding —
+        see :mod:`repro.core.pipeline`).  Requires the incremental
+        snapshotter: speculation refreshes the retained buffer in place,
+        which a full snapshotter does not keep."""
+        from .pipeline import CyclePipeline
+        if not isinstance(self.snapshotter, IncrementalSnapshotter):
+            raise ValueError(
+                "pipelined cycles require incremental snapshots")
+        self.pipeline = CyclePipeline(self)
+        return self.pipeline
 
     # ------------------------------------------------------------------
     # Queue management
@@ -170,6 +186,8 @@ class QSCH:
         if obs is not None:
             obs.cycle_begin(now)
         result = CycleResult()
+        if self.pipeline is not None:
+            self.pipeline.begin_cycle(state)
         with obs_phase(obs, "snapshot"):
             snap = self.snapshotter.take(state)
         self._working_snap = snap
@@ -206,6 +224,8 @@ class QSCH:
                     self.elastic.grow_pass(ctx)
             return result
         finally:
+            if self.pipeline is not None:
+                self.pipeline.end_cycle(state, now)
             self._working_snap = None
             if obs is not None:
                 obs.cycle_end(result, ctx)

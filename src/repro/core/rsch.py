@@ -89,6 +89,20 @@ class RSCHConfig:
     # Same-node co-location bonus per already-placed pod of the job
     # (node-level E-Binpack, §3.3.3).
     colocate_bonus: float = 2.0
+    # Subset scoring (million-node core): for default Filter chains,
+    # Level-1 preselection runs on snapshot-maintained per-group
+    # aggregates (O(groups), patched row-wise on placement deltas) and
+    # the Level-2 score pass touches only the selected groups' member
+    # nodes — exact-identical to the full-width pass.  Falls back to
+    # full width for custom Filter chains, non-"np" backends, and
+    # decision-audit capture.
+    subset_scoring: bool = True
+    # Gang slot-selection engine: "topk" (vectorized sort + chain
+    # emission), "heap" (the lazy-greedy loop, kept as the A/B oracle),
+    # or "topk_kernel" (jax.lax.top_k prefilter).  The vectorized
+    # engines auto-fall-back to the heap when plugin weights make slot
+    # chains decreasing (see scoring.chains_nondecreasing).
+    slot_engine: str = "topk"
 
 
 def profiles_from_config(config: RSCHConfig) -> ProfileSet:
@@ -150,9 +164,21 @@ class RSCH:
         # Static per-NodeNetGroup spine membership (topology never changes).
         self._group_spine = topology.spine_id[np.searchsorted(
             topology.leaf_id, np.arange(topology.n_leaf_groups))]
+        # Member-node range of each NodeNetGroup: leaf_id is contiguous
+        # ascending (idx // nodes_per_leaf), so group g's members are
+        # exactly arange(_leaf_start[g], _leaf_start[g+1]).  This is what
+        # lets subset scoring materialize selected-group node lists
+        # without an O(n) membership scan.
+        self._leaf_start = np.searchsorted(
+            topology.leaf_id, np.arange(topology.n_leaf_groups + 1))
         # Optional telemetry facade (repro.obs): filter/score phase
         # timing + decision-audit capture.  None = zero-cost detached.
         self.obs = None
+        # Armed by the cycle pipeline (repro.core.pipeline): a
+        # precomputed ScheduleResult for the predicted head job, consumed
+        # by :meth:`schedule` when every optimistic-concurrency guard
+        # holds.  None in unpipelined operation.
+        self.speculation = None
 
     # ------------------------------------------------------------------
     # Public API
@@ -184,8 +210,17 @@ class RSCH:
         subsystem enumerates a job's candidate parallelism plans
         through this check without ever mutating the job; with the
         job's own shape it IS :meth:`feasible`."""
-        pool, _ = self._resolve_pool(job, snap, self.profile_for(job),
-                                     None)
+        pool, default = self._resolve_pool(job, snap, self.profile_for(job),
+                                           None)
+        if default:
+            # Snapshot-maintained per-group slot totals: O(groups) to
+            # sum, patched in O(dirty rows) on placement deltas.  A
+            # node's ``floor(free/gpus_per_pod)`` is 0 exactly when
+            # ``free < gpus_per_pod``, so the masked-division sum equals
+            # the legacy ``pool & per_node_ok`` capacity count.
+            totals = self._group_slots_cached(snap, int(job.gpu_type),
+                                              None, gpus_per_pod)
+            return int(totals.sum()) >= n_pods
         per_node_ok = snap.free_gpus >= gpus_per_pod
         capacity = int((snap.free_gpus // gpus_per_pod)[
             pool & per_node_ok].sum())
@@ -196,6 +231,22 @@ class RSCH:
         """Compute a placement against a snapshot.  Pure — commits happen
         via ``ClusterState.allocate`` by the caller.  ``ctx`` gives
         Score plugins optional cluster context (e.g. running jobs)."""
+        spec = self.speculation
+        if spec is not None and spec.job_uid == job.uid:
+            # A pipelined speculative result exists for this job.  The
+            # pipeline already verified no state mutation intervened;
+            # here we verify the job itself (shape unchanged — elastic
+            # reshapes recompute), the snapshot identity/mutation count,
+            # and the score-weight fingerprint (a tuning controller may
+            # have nudged plugin weights between cycles).
+            self.speculation = None
+            if (spec.snap is snap and spec.mut == snap.mut_count
+                    and spec.shape == (job.n_pods, job.gpus_per_pod,
+                                       int(job.gpu_type), job.kind)
+                    and spec.fingerprint
+                    == self._weights_fingerprint(job, snap)):
+                spec.consumed = True
+                return spec.result
         profile = self.profile_for(job)
         obs = self.obs
         capture: Optional[Dict] = None
@@ -209,6 +260,80 @@ class RSCH:
                 break
         result.audit = capture
         return result
+
+    # ------------------------------------------------------------------
+    # Snapshot-maintained per-group aggregates (subset scoring)
+    # ------------------------------------------------------------------
+    # Each helper registers a row-patchable TrackedGroupSum on the
+    # snapshot (see repro.core.snapshot): built once per (pool, cycle
+    # epoch) in O(n), then patched in O(dirty rows) as placements fold
+    # in, and dropped wholesale on health/drain refreshes.  Only valid
+    # for DEFAULT Filter chains, whose pool mask is the snapshot's own
+    # cached candidate_pool — custom chains shape the pool per job.
+
+    def _group_slots_cached(self, snap: Snapshot, gpu_type: int,
+                            zone: Optional[str],
+                            request: int) -> np.ndarray:
+        topo = self.topology
+
+        def contrib(s: Snapshot, idx: Optional[np.ndarray]) -> np.ndarray:
+            p = s.candidate_pool(gpu_type, zone)
+            if idx is None:
+                return np.where(p, s.free_gpus // request, 0)
+            return np.where(p[idx], s.free_gpus[idx] // request, 0)
+
+        return snap.tracked_sum(("gslots", gpu_type, zone, int(request)),
+                                topo.leaf_id, topo.n_leaf_groups, contrib)
+
+    def _group_free_cached(self, snap: Snapshot, gpu_type: int,
+                           zone: Optional[str]) -> np.ndarray:
+        topo = self.topology
+
+        def contrib(s: Snapshot, idx: Optional[np.ndarray]) -> np.ndarray:
+            p = s.candidate_pool(gpu_type, zone)
+            if idx is None:
+                return np.where(p, s.free_gpus, 0)
+            return np.where(p[idx], s.free_gpus[idx], 0)
+
+        return snap.tracked_sum(("gfree", gpu_type, zone),
+                                topo.leaf_id, topo.n_leaf_groups, contrib)
+
+    def _group_used_cached(self, snap: Snapshot, gpu_type: int,
+                           zone: Optional[str]) -> np.ndarray:
+        topo = self.topology
+
+        def contrib(s: Snapshot, idx: Optional[np.ndarray]) -> np.ndarray:
+            p = s.candidate_pool(gpu_type, zone)
+            if idx is None:
+                return np.where(p, s.used_gpus, 0)
+            return np.where(p[idx], s.used_gpus[idx], 0)
+
+        return snap.tracked_sum(("gused", gpu_type, zone),
+                                topo.leaf_id, topo.n_leaf_groups, contrib)
+
+    def _members_of_groups(self, groups) -> np.ndarray:
+        """Ascending node indices of the given NodeNetGroups.  Ascending
+        order matters: the slot-selection tie rule is lowest-node-index,
+        so subset positions must increase with node index."""
+        off = self._leaf_start
+        return np.concatenate([np.arange(off[g], off[g + 1])
+                               for g in sorted(int(g) for g in groups)])
+
+    def _weights_fingerprint(self, job: Job, snap: Snapshot) -> tuple:
+        """Per-pass (scorer, fused weights, per-pod bonus) tuple — the
+        speculation guard against score-parameter drift between the
+        speculative and the real schedule call (e.g. a self-tuning
+        controller adjusting plugin weights)."""
+        fp = []
+        for pass_ in self.profile_for(job).plan(job, snap):
+            for s in pass_.scorers:
+                w = s.fused_weights(job)
+                fp.append((s.name,
+                           None if w is None
+                           else (w.used, w.fit, w.group, w.topo),
+                           s.per_pod_bonus(job) if s.pod_dependent
+                           else 0.0))
+        return tuple(fp)
 
     # ------------------------------------------------------------------
     # Core two-level placement (one PlacementPass)
@@ -277,12 +402,34 @@ class RSCH:
         if not pool.any():
             return fail("empty node pool")
 
+        # Subset scoring (million-node core): with a default Filter
+        # chain, the numpy backend and no audit capture, Level 1 runs on
+        # snapshot-maintained per-group aggregates and Level 2 touches
+        # only the selected groups' member nodes — exact-identical to
+        # the full-width pass (tests/test_scale.py), but per-attempt
+        # cost scales with the job's group footprint, not cluster size.
+        use_subset = (default_pool and self.config.subset_scoring
+                      and self.config.batched_gang
+                      and self.config.score_backend == "np"
+                      and capture is None)
+
         # --- Level 1: NodeNetGroup preselection (§3.4.2) ---------------
-        pod_slots = np.where(pool, snap.free_gpus // job.gpus_per_pod, 0)
+        gt = int(job.gpu_type)
+        if use_subset:
+            pod_slots = None
+            group_slots = self._group_slots_cached(snap, gt, pass_.zone,
+                                                   job.gpus_per_pod)
+            group_free = self._group_free_cached(snap, gt, pass_.zone)
+            group_used_i = self._group_used_cached(snap, gt, pass_.zone)
+        else:
+            pod_slots = np.where(pool, snap.free_gpus // job.gpus_per_pod,
+                                 0)
+            group_slots = group_free = group_used_i = None
         group_term = self._group_score_terms(job, snap, pool, pass_, ctx)
         selected_groups = self._preselect_groups(
             job, snap, pool, pod_slots, pass_.enhanced, pass_.spread,
-            group_term)
+            group_term, group_slots=group_slots, group_free=group_free,
+            group_used=group_used_i)
         if selected_groups is None:
             return fail("no NodeNetGroup set satisfies job")
         # One gather resolves both group membership and the per-node
@@ -290,8 +437,6 @@ class RSCH:
         group_pref = np.zeros(topo.n_leaf_groups, dtype=np.float32)
         for rank, g in enumerate(selected_groups):
             group_pref[g] = 1.0 / (1.0 + rank)
-        topo_pref = group_pref[topo.leaf_id]
-        in_groups = topo_pref > 0.0
 
         # --- Level 2: node selection within selected groups ------------
         # Score chain: fused weights go through the shared kernel pass;
@@ -302,10 +447,7 @@ class RSCH:
             if w is not None)
         colocate = sum(s.per_pod_bonus(job) for s in pass_.scorers
                        if s.pod_dependent)
-        group_used = np.bincount(
-            topo.leaf_id, weights=np.where(pool, snap.used_gpus, 0),
-            minlength=topo.n_leaf_groups).astype(np.float32)
-        cap_key = ("group_cap", int(job.gpu_type), pass_.zone)
+        cap_key = ("group_cap", gt, pass_.zone)
         group_cap = snap.derived.get(cap_key) if default_pool else None
         if group_cap is None:
             # Healthy capacity per group is delta-invariant -> cacheable
@@ -317,24 +459,38 @@ class RSCH:
                 minlength=topo.n_leaf_groups).astype(np.float32)
             if default_pool:
                 snap.derived[cap_key] = group_cap
+        if use_subset:
+            group_used = group_used_i.astype(np.float32)
+        else:
+            group_used = np.bincount(
+                topo.leaf_id, weights=np.where(pool, snap.used_gpus, 0),
+                minlength=topo.n_leaf_groups).astype(np.float32)
         group_load = group_used / np.maximum(group_cap, 1.0)
-        # topo_pref (computed above) prefers earlier-ranked (anchor)
-        # groups, keeping a multi-pod job inside as few groups as
-        # possible (§3.3.3 LeafGroup E-Binpack).
-        mask = pool & in_groups
-        gload_nodes = group_load[topo.leaf_id]
         extra = self._extra_score_terms(job, snap, pool, pass_, ctx)
         score_out = {} if pa is not None else None
         with obs_phase(obs, "score"):
-            if self.config.batched_gang:
-                nodes = self._select_nodes_batched(
-                    job, snap, mask, gload_nodes, topo_pref, weights,
-                    colocate, np.where(in_groups, pod_slots, 0), extra,
-                    score_out)
+            if use_subset:
+                gload_nodes = topo_pref = None
+                nodes = self._select_nodes_subset(
+                    job, snap, pool, selected_groups, group_pref,
+                    group_load, weights, colocate, extra)
             else:
-                nodes = self._select_nodes_sequential(
-                    job, snap, pool, in_groups, gload_nodes, topo_pref,
-                    weights, colocate, extra)
+                # topo_pref prefers earlier-ranked (anchor) groups,
+                # keeping a multi-pod job inside as few groups as
+                # possible (§3.3.3 LeafGroup E-Binpack).
+                topo_pref = group_pref[topo.leaf_id]
+                in_groups = topo_pref > 0.0
+                gload_nodes = group_load[topo.leaf_id]
+                if self.config.batched_gang:
+                    nodes = self._select_nodes_batched(
+                        job, snap, pool & in_groups, gload_nodes,
+                        topo_pref, weights, colocate,
+                        np.where(in_groups, pod_slots, 0), extra,
+                        score_out)
+                else:
+                    nodes = self._select_nodes_sequential(
+                        job, snap, pool, in_groups, gload_nodes,
+                        topo_pref, weights, colocate, extra)
         if nodes is None:
             return fail("gang placement failed")
         if pa is not None:
@@ -527,7 +683,43 @@ class RSCH:
             score_out["scores"] = scores
         return select_gang_slots(
             scores, snap.free_gpus, job.gpus_per_pod, job.n_pods,
-            fit_weight=weights.fit, colocate_bonus=colocate, slots=slots)
+            fit_weight=weights.fit, colocate_bonus=colocate, slots=slots,
+            engine=self.config.slot_engine)
+
+    def _select_nodes_subset(self, job: Job, snap: Snapshot,
+                             pool: np.ndarray, selected_groups: List[int],
+                             group_pref: np.ndarray,
+                             group_load: np.ndarray,
+                             weights: ScoreWeights, colocate: float,
+                             extra: Optional[np.ndarray] = None
+                             ) -> Optional[List[int]]:
+        """Batched gang placement over ONLY the selected groups' member
+        nodes (subset scoring).  Exact-identical to the full-width
+        batched pass: every score term is elementwise, nodes outside the
+        selected groups contribute zero slots there, and the ascending
+        subset preserves the lowest-node-index tie rule — so the fused
+        scores, candidate set and emission order all coincide.
+        """
+        sub = self._members_of_groups(selected_groups)
+        leaf_sub = self.topology.leaf_id[sub]
+        mask = pool[sub]
+        free_sub = snap.free_gpus[sub]
+        scores = node_scores_np(
+            free_sub, snap.used_gpus[sub], mask, group_load[leaf_sub],
+            group_pref[leaf_sub], job.gpus_per_pod,
+            self.topology.gpus_per_node, weights)
+        if extra is not None:
+            ex = np.asarray(extra, dtype=np.float32)[sub]
+            scores = np.where(scores > NEG_INF, scores + ex, scores)
+        slots = np.where(mask, free_sub // job.gpus_per_pod,
+                         0).astype(np.int64)
+        order = select_gang_slots(
+            scores, free_sub, job.gpus_per_pod, job.n_pods,
+            fit_weight=weights.fit, colocate_bonus=colocate, slots=slots,
+            engine=self.config.slot_engine)
+        if order is None:
+            return None
+        return [int(sub[p]) for p in order]
 
     def _select_nodes_sequential(self, job: Job, snap: Snapshot,
                                  pool: np.ndarray, in_groups: np.ndarray,
@@ -565,9 +757,12 @@ class RSCH:
 
     # ------------------------------------------------------------------
     def _preselect_groups(self, job: Job, snap: Snapshot, pool: np.ndarray,
-                          pod_slots: np.ndarray, enhanced: bool,
+                          pod_slots: Optional[np.ndarray], enhanced: bool,
                           spread: bool,
-                          group_term: Optional[np.ndarray] = None
+                          group_term: Optional[np.ndarray] = None,
+                          group_slots: Optional[np.ndarray] = None,
+                          group_free: Optional[np.ndarray] = None,
+                          group_used: Optional[np.ndarray] = None
                           ) -> Optional[List[int]]:
         """Pick an ordered list of candidate NodeNetGroups.
 
@@ -578,13 +773,19 @@ class RSCH:
           neighbours (JTTED: fewest groups, closest topology).
 
         ``pod_slots`` is the per-node capacity expansion
-        ``floor(free / gpus_per_pod)`` restricted to the pool.
-        ``group_term`` (Score plugins' group-level contribution) ranks
-        above the pass's default keys; ties fall through to them.
+        ``floor(free / gpus_per_pod)`` restricted to the pool; subset
+        scoring passes ``None`` and supplies precomputed per-group
+        ``group_slots``/``group_free``/``group_used`` aggregates (the
+        snapshot-maintained TrackedGroupSum totals — identical values to
+        the legacy bincounts) instead.  ``group_term`` (Score plugins'
+        group-level contribution) ranks above the pass's default keys;
+        ties fall through to them.
         """
         topo = self.topology
-        group_slots = np.bincount(topo.leaf_id, weights=pod_slots,
-                                  minlength=topo.n_leaf_groups).astype(int)
+        if group_slots is None:
+            group_slots = np.bincount(
+                topo.leaf_id, weights=pod_slots,
+                minlength=topo.n_leaf_groups).astype(int)
         candidates = np.nonzero(group_slots > 0)[0]
         if len(candidates) == 0:
             return None
@@ -596,18 +797,26 @@ class RSCH:
         if len(fits_one) > 0:
             # Only the best-ranked group is used; lexsort the (reversed)
             # key tuples instead of a python sort with lambda keys.
-            group_free = np.bincount(
-                topo.leaf_id, weights=np.where(pool, snap.free_gpus, 0),
-                minlength=topo.n_leaf_groups).astype(int)
             if spread:
+                if group_free is None:
+                    group_free = np.bincount(
+                        topo.leaf_id,
+                        weights=np.where(pool, snap.free_gpus, 0),
+                        minlength=topo.n_leaf_groups).astype(int)
                 # Spread wants room: emptiest group first.
                 keys = (fits_one, -group_free[fits_one])
             else:
-                group_used = np.bincount(
-                    topo.leaf_id,
-                    weights=np.where(pool, snap.used_gpus, 0),
-                    minlength=topo.n_leaf_groups).astype(int)
+                if group_used is None:
+                    group_used = np.bincount(
+                        topo.leaf_id,
+                        weights=np.where(pool, snap.used_gpus, 0),
+                        minlength=topo.n_leaf_groups).astype(int)
                 if enhanced:
+                    if group_free is None:
+                        group_free = np.bincount(
+                            topo.leaf_id,
+                            weights=np.where(pool, snap.free_gpus, 0),
+                            minlength=topo.n_leaf_groups).astype(int)
                     # LeafGroup-level E-Binpack: busiest group that fits.
                     keys = (fits_one, group_free[fits_one],
                             -group_used[fits_one])

@@ -130,33 +130,19 @@ def pod_slots_np(free: np.ndarray, scores: np.ndarray,
     return np.where(valid, free // request, 0).astype(np.int64)
 
 
-def select_gang_slots(scores: np.ndarray, free: np.ndarray, request: int,
-                      n_pods: int, *, fit_weight: float = 0.0,
-                      colocate_bonus: float = 0.0,
-                      slots: Optional[np.ndarray] = None
-                      ) -> Optional[List[int]]:
-    """Capacity-aware top-k slot selection for a whole gang at once.
+def _prefilter_np(scores: np.ndarray, slots: np.ndarray,
+                  n_pods: int) -> np.ndarray:
+    """Restrict slot selection to the top-``n_pods`` candidate nodes.
 
-    ``scores`` is the fused filter+score output for the *snapshot* free
-    counts (slot 0 of every node).  Returns the node index for each pod
-    in placement order, or ``None`` when fewer than ``n_pods`` slots
-    exist.  The heap holds exactly one entry per node — its current slot
-    value — so each pop is the argmax the sequential loop would have
-    taken (ties break toward the lower node index, matching
-    ``np.argmax``).
+    At most ``n_pods`` distinct nodes are ever popped, and a node's
+    FIRST pop happens at its slot-0 value — which must then be ≥ the
+    static slot-0 value of every never-popped node.  So the selection
+    can be restricted to the top-``n_pods`` candidates by (slot-0 value
+    desc, index asc); everything below that line is unreachable.
+    ``argpartition`` keeps this O(n).  Returns candidate node indices in
+    ascending order.
     """
-    free = np.asarray(free)
-    if slots is None:
-        slots = pod_slots_np(free, scores, request)
-    if int(slots.sum()) < n_pods:
-        return None
     cand = np.nonzero(slots > 0)[0]
-    # At most n_pods distinct nodes are ever popped, and a node's FIRST
-    # pop happens at its slot-0 value — which must then be >= the static
-    # slot-0 value of every never-popped node.  So the selection can be
-    # restricted to the top-n_pods candidates by (slot-0 value desc,
-    # index asc) before building the heap; everything below that line is
-    # unreachable.  argpartition keeps this O(n).
     if len(cand) > n_pods:
         vals = scores[cand]
         part = np.argpartition(-vals, n_pods - 1)[:n_pods]
@@ -164,6 +150,98 @@ def select_gang_slots(scores: np.ndarray, free: np.ndarray, request: int,
         above = np.nonzero(vals > thresh)[0]
         ties = np.nonzero(vals == thresh)[0][:n_pods - len(above)]
         cand = cand[np.sort(np.concatenate([above, ties]))]
+    return cand
+
+
+def chains_nondecreasing(fit_weight: float, colocate_bonus: float) -> bool:
+    """True when every node's slot-value chain is nondecreasing in the
+    slot index — the precondition for the vectorized top-k engine.
+
+    ``slot(i, p) = base[i] + colocate_bonus·p (+ fit_weight at the last
+    slot when free is an exact multiple of request)``, so consecutive
+    deltas are ``colocate_bonus`` everywhere except into the final
+    exact-fit slot, where the delta is ``colocate_bonus + fit_weight``.
+    Builtin profiles satisfy both (bonus 2.0, fit ≥ 0); plugins may
+    contribute negative weights, in which case the heap engine is used.
+    """
+    return colocate_bonus >= 0.0 and colocate_bonus + fit_weight >= 0.0
+
+
+def emit_slot_chains(cand: np.ndarray, scores: np.ndarray,
+                     free: np.ndarray, slots: np.ndarray, request: int,
+                     n_pods: int, fit_weight: float,
+                     colocate_bonus: float) -> List[int]:
+    """Exact f64 epilogue shared by the numpy and kernel top-k paths.
+
+    With nondecreasing chains (:func:`chains_nondecreasing`) the lazy
+    heap provably emits each popped node's ENTIRE chain consecutively:
+    once node ``c`` wins a pop, its next slot value is ≥ its slot-0
+    value, which in turn beats (strictly, or by the lower-index tie
+    rule) every never-popped node's slot-0 value.  Heap order therefore
+    collapses to: sort candidates by (slot-0 value desc, index asc),
+    concatenate full chains, truncate at ``n_pods``.
+
+    Float exactness: slot-0 values replicate the heap's arithmetic
+    bit-for-bit — f64 base with the exact-fit weight subtracted and
+    re-added (NOT algebraically simplified, since ``(x − w) + w ≠ x``
+    in floats).  ``np.argsort(kind="stable")`` over an ascending
+    candidate array preserves the heap's lowest-index tie-breaking.
+    """
+    cand = np.sort(np.asarray(cand, dtype=np.int64))
+    sfree = free[cand].astype(np.int64)
+    base = scores[cand].astype(np.float64)
+    exact0 = sfree == request
+    base = np.where(exact0, base - fit_weight, base)
+    s0 = np.where(exact0, base + fit_weight, base)
+    order = np.argsort(-s0, kind="stable")
+    counts = np.asarray(slots, dtype=np.int64)[cand][order]
+    return np.repeat(cand[order], counts)[:n_pods].tolist()
+
+
+def select_gang_slots(scores: np.ndarray, free: np.ndarray, request: int,
+                      n_pods: int, *, fit_weight: float = 0.0,
+                      colocate_bonus: float = 0.0,
+                      slots: Optional[np.ndarray] = None,
+                      engine: str = "heap"
+                      ) -> Optional[List[int]]:
+    """Capacity-aware top-k slot selection for a whole gang at once.
+
+    ``scores`` is the fused filter+score output for the *snapshot* free
+    counts (slot 0 of every node).  Returns the node index for each pod
+    in placement order, or ``None`` when fewer than ``n_pods`` slots
+    exist.
+
+    ``engine`` selects the implementation — all exact-identical:
+
+    * ``"heap"`` — the lazy-greedy heap pop (the A/B oracle).  One
+      entry per node, so each pop is the argmax the sequential loop
+      would have taken (ties break toward the lower node index,
+      matching ``np.argmax``).
+    * ``"topk"`` — vectorized sort + chain emission
+      (:func:`emit_slot_chains`), O(k log k) after an O(n) prefilter
+      with no Python loop.
+    * ``"topk_kernel"`` — same epilogue behind a ``jax.lax.top_k``
+      prefilter (``repro.kernels.ops.gang_slot_prefilter``).
+
+    The vectorized engines require nondecreasing slot chains; when
+    plugin weights violate that (:func:`chains_nondecreasing`), they
+    fall back to the heap automatically.
+    """
+    free = np.asarray(free)
+    if slots is None:
+        slots = pod_slots_np(free, scores, request)
+    if int(slots.sum()) < n_pods:
+        return None
+    if engine != "heap" and chains_nondecreasing(fit_weight,
+                                                 colocate_bonus):
+        if engine == "topk_kernel":
+            from ..kernels.ops import gang_slot_prefilter  # deferred
+            cand = gang_slot_prefilter(scores, slots, n_pods)
+        else:
+            cand = _prefilter_np(scores, slots, n_pods)
+        return emit_slot_chains(cand, scores, free, slots, request,
+                                n_pods, fit_weight, colocate_bonus)
+    cand = _prefilter_np(scores, slots, n_pods)
     # Per-node slot chains.  base strips the slot-0 exact-fit term so it
     # can be re-added at whichever slot the fit actually moves to.
     sfree = free[cand].astype(np.int64)

@@ -45,6 +45,11 @@ class SimConfig:
     # Cluster dynamics (failures, drains, autoscaling); None = static
     # cluster, byte-identical to the pre-dynamics simulator.
     dynamics: Optional["DynamicsConfig"] = None
+    # Optimistic cycle pipelining (repro.core.pipeline): speculatively
+    # snapshot+score the next cycle's head job so a pipelined deployment
+    # can overlap it with binding I/O.  Off = byte-identical classic
+    # sequential cycles.
+    pipelined_cycles: bool = False
 
 
 @dataclasses.dataclass
@@ -67,6 +72,9 @@ class SimResult:
     drains: int = 0
     scale_events: int = 0
     dynamics: Optional[object] = None
+    # CyclePipeline.stats() when pipelined_cycles was on (hits,
+    # conflicts, misses, spec_seconds); None otherwise.
+    pipeline: Optional[dict] = None
 
 
 class Simulator:
@@ -81,6 +89,8 @@ class Simulator:
             # Voluntary reshapes report through the same recorder as
             # failures (flagged, so MTTR stays failure-only).
             elastic.bind_metrics(self.metrics)
+        if self.config.pipelined_cycles and qsch.pipeline is None:
+            qsch.enable_pipeline()
         self.bus = EventBus()
         self.now = 0.0
         self.cycles = 0
@@ -213,6 +223,8 @@ class Simulator:
                            admit_rejected=self.admit_rejected,
                            infeasible=self.infeasible,
                            requeues=self.requeues)
+        if self.qsch.pipeline is not None:
+            result.pipeline = self.qsch.pipeline.stats()
         if self._engine is not None:
             self._engine.finalize(result)
         if self.obs is not None:

@@ -110,6 +110,65 @@ def node_scores_and_slots(free, used, mask, group_load, topo_pref, *,
     return scores.reshape(padded)[:n], slots.reshape(padded)[:n]
 
 
+def gang_slot_prefilter(scores, slots, n_pods: int) -> np.ndarray:
+    """Top-``n_pods`` candidate-node prefilter via ``jax.lax.top_k``.
+
+    Set-equivalent to the numpy ``argpartition`` prefilter in
+    ``repro.core.scoring``: both select, among nodes with at least one
+    pod slot, the ``n_pods`` best by (slot-0 score desc, index asc) —
+    ``lax.top_k`` documents lower-index-first tie-breaking, which is
+    exactly the threshold-tie rule of the numpy path.  Scores at
+    slotless nodes are masked to ``-inf`` before the top-k, and masked
+    entries that survive an under-full top-k (fewer than ``n_pods``
+    candidates exist) are filtered back out, so the returned set equals
+    ``{slots > 0}`` in that case.  Returns ascending int64 node indices.
+    """
+    import jax
+
+    slots = np.asarray(slots)
+    cand_total = int((slots > 0).sum())
+    if cand_total <= n_pods:
+        return np.nonzero(slots > 0)[0]
+    masked = jnp.where(jnp.asarray(slots) > 0, jnp.asarray(scores),
+                       _ns.NEG_INF)
+    _, idx = jax.lax.top_k(masked, n_pods)
+    idx = np.asarray(idx, dtype=np.int64)
+    return np.sort(idx[slots[idx] > 0])
+
+
+def gang_slot_topk(free, used, mask, group_load, topo_pref, *,
+                   request: int, gpus_per_node: int,
+                   weights: ScoreWeights, n_pods: int,
+                   fit_weight: float = 0.0, colocate_bonus: float = 0.0,
+                   backend: str = "ref"):
+    """Fully fused gang placement: one (scores, slots) kernel sweep, a
+    ``lax.top_k`` candidate prefilter, and the shared exact-f64 chain
+    epilogue from ``repro.core.scoring`` — exact-match vs the heap loop
+    (the A/B oracle) whenever the slot chains are nondecreasing.
+
+    Returns the pod→node index list, or ``None`` when the gang does not
+    fit.  Raises ``ValueError`` if the weight signs violate the
+    nondecreasing-chain precondition (callers should route such jobs to
+    the heap engine instead).
+    """
+    from ..core.scoring import chains_nondecreasing, emit_slot_chains
+
+    if not chains_nondecreasing(fit_weight, colocate_bonus):
+        raise ValueError(
+            "gang_slot_topk requires nondecreasing slot chains "
+            "(colocate_bonus >= 0 and colocate_bonus + fit_weight >= 0)")
+    scores, slots = node_scores_and_slots(
+        free, used, mask, group_load, topo_pref, request=request,
+        gpus_per_node=gpus_per_node, weights=weights, backend=backend)
+    scores = np.asarray(scores)
+    slots = np.asarray(slots)
+    if int(slots.sum()) < n_pods:
+        return None
+    cand = gang_slot_prefilter(scores, slots, n_pods)
+    return emit_slot_chains(cand, scores, np.asarray(free), slots,
+                            request, n_pods, fit_weight, colocate_bonus)
+
+
 def best_node(free, used, mask, group_load, topo_pref, *, request: int,
               gpus_per_node: int, weights: ScoreWeights,
               backend: str = "ref") -> int:

@@ -107,6 +107,104 @@ def test_gang_placement_never_partial(seed):
     assert state.allocations == {}
 
 
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["alloc", "release", "gpu_health",
+                               "node_health", "drain", "snap"]),
+              st.integers(0, 10 ** 6)),
+    min_size=5, max_size=50))
+@settings(max_examples=25, deadline=None)
+def test_soa_columns_match_naive_reference(ops):
+    """Random allocate/release/health/drain interleavings: the SoA
+    ground-truth AND maintained derived columns must stay exactly equal
+    to a naive per-field reference model, and Full vs Incremental
+    snapshots of identically-driven states must stay equal."""
+    from repro.core.job import Placement, PodPlacement
+    from repro.core.snapshot import (FullSnapshotter,
+                                     IncrementalSnapshotter,
+                                     snapshots_equal)
+    topo = small_topology(n_nodes=16, gpus_per_node=8, nodes_per_leaf=4)
+    n, g = topo.n_nodes, topo.gpus_per_node
+    state_a = ClusterState.create(topo)       # Full snapshotter
+    state_b = ClusterState.create(topo)       # Incremental snapshotter
+    full, inc = FullSnapshotter(), IncrementalSnapshotter()
+    # Naive per-field reference model: plain arrays, no derived caches.
+    busy = np.zeros((n, g), dtype=bool)
+    ghealthy = np.ones((n, g), dtype=bool)
+    nhealthy = np.ones(n, dtype=bool)
+    drain = np.zeros(n, dtype=bool)
+    allocs = {}
+    uid = 0
+    for kind, r in ops:
+        rng = np.random.default_rng(r)
+        if kind == "alloc":
+            k = int(rng.integers(1, g + 1))
+            ok = nhealthy & ~drain & ((~busy & ghealthy).sum(1) >= k)
+            cand = np.nonzero(ok)[0]
+            if len(cand) == 0:
+                continue
+            node = int(cand[rng.integers(0, len(cand))])
+            idxs = np.nonzero(~busy[node] & ghealthy[node])[0][:k]
+            job = Job(uid=uid, tenant="a", gpu_type=0, n_pods=1,
+                      gpus_per_pod=k)
+            pl = Placement(pods=[PodPlacement(
+                node=node, gpu_indices=tuple(int(i) for i in idxs))])
+            state_a.allocate(job, pl)
+            state_b.allocate(job, pl)
+            busy[node, idxs] = True
+            allocs[uid] = (node, idxs)
+            uid += 1
+        elif kind == "release":
+            if not allocs:
+                continue
+            u = sorted(allocs)[int(rng.integers(0, len(allocs)))]
+            node, idxs = allocs.pop(u)
+            state_a.release(u)
+            state_b.release(u)
+            busy[node, idxs] = False
+        elif kind == "gpu_health":
+            node, gi = int(rng.integers(0, n)), int(rng.integers(0, g))
+            h = bool(rng.integers(0, 2))
+            state_a.set_gpu_health(node, gi, h)
+            state_b.set_gpu_health(node, gi, h)
+            ghealthy[node, gi] = h
+        elif kind == "node_health":
+            node = int(rng.integers(0, n))
+            h = bool(rng.integers(0, 2))
+            state_a.set_node_health(node, h)
+            state_b.set_node_health(node, h)
+            nhealthy[node] = h
+        elif kind == "drain":
+            nodes = np.unique(rng.integers(0, n, size=3))
+            d = bool(rng.integers(0, 2))
+            state_a.set_drain(nodes, d)
+            state_b.set_drain(nodes, d)
+            drain[nodes] = d
+        else:                                   # "snap"
+            assert snapshots_equal(full.take(state_a),
+                                   inc.take(state_b))
+    # Ground-truth columns == reference model, on both states.
+    for state in (state_a, state_b):
+        state.ensure_derived()
+        cols = state.cols
+        assert np.array_equal(cols.gpu_busy, busy)
+        assert np.array_equal(cols.gpu_healthy, ghealthy)
+        assert np.array_equal(cols.node_healthy, nhealthy)
+        assert np.array_equal(cols.node_draining, drain)
+        # Maintained derived columns == from-scratch naive formulas.
+        hc = ghealthy.sum(1)
+        used = (busy & ghealthy).sum(1)
+        assert np.array_equal(cols.healthy_count, hc)
+        assert np.array_equal(cols.used_gpus, used)
+        assert np.array_equal(cols.free_gpus,
+                              np.where(nhealthy, hc - used, 0))
+        assert np.array_equal(cols.busy_count, busy.sum(1))
+        assert np.array_equal(
+            cols.fragmented,
+            (used > 0) & (used < hc) & nhealthy)
+        state.check_invariants()
+    assert snapshots_equal(full.take(state_a), inc.take(state_b))
+
+
 @given(st.data())
 @settings(max_examples=20, deadline=None)
 def test_quota_ledger_charge_refund_inverse(data):
